@@ -1,0 +1,103 @@
+"""Table II reproduction: BETA vs FP-32/FIX-16 baselines vs CPU.
+
+Columns reproduced from the calibrated structural model (core.energy_model):
+throughput (GOPS), power (W), energy efficiency (GOPS/W) for the three
+benchmark models (BiT / BinaryBERT / BiBERT, all BERT-base @ W1A1), the two
+same-FPGA baselines, and a live-measured CPU row (this container's CPU
+running the same BERT-base QMM inventory in fp32 jnp — the Table II CPU
+column used an i7-10510U; ours is reported as measured).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy_model as em
+from repro.core.precision import MODES
+
+
+def _cpu_bert_gops(seq: int = 128, reps: int = 3) -> float:
+    """Measured fp32 GOPS of one BERT-base QMM inventory on this CPU."""
+    wl = em.bert_base_qmm_workload(seq=seq)
+    rng = np.random.default_rng(0)
+    mats = []
+    for s in wl:
+        a = jnp.asarray(rng.standard_normal((s.m, s.k), dtype=np.float32))
+        b = jnp.asarray(rng.standard_normal((s.k, s.n), dtype=np.float32))
+        mats.append((a, b, s.count))
+
+    @jax.jit
+    def run_all(mats_flat):
+        outs = []
+        for a, b in mats_flat:
+            outs.append(jnp.sum(a @ b))
+        return jnp.stack(outs).sum()
+
+    flat = [(a, b) for a, b, _ in mats]
+    run_all(flat).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        run_all(flat).block_until_ready()
+    per_pass = (time.perf_counter() - t0) / reps
+    # scale by per-shape counts (the jit pass runs each unique QMM once)
+    total_ops = 2.0 * sum(s.macs for s in wl)
+    once_ops = 2.0 * sum(s.m * s.k * s.n for s in wl)
+    est_time = per_pass * (total_ops / once_ops)
+    return total_ops / est_time / 1e9
+
+
+def run() -> list:
+    rows = []
+    wl = em.bert_base_qmm_workload()
+    mode = MODES["W1A1"]
+    hw = em.ZCU102_BETA
+    for name, oh in em.BENCHMARK_OVERHEADS.items():
+        gops, t = em.throughput_gops(wl, mode, hw, oh)
+        p = em.power_w(wl, mode, hw, oh)
+        eff = em.energy_efficiency(wl, mode, hw, oh)
+        ref = em.PAPER_TABLE2[name]
+        rows.append(
+            {
+                "name": f"table2/BETA/{name}",
+                "us_per_call": t * 1e6,
+                "derived": (
+                    f"gops={gops:.1f}(paper {ref['gops']:.1f})"
+                    f" power={p:.2f}W(paper {ref['power_w']:.2f})"
+                    f" eff={eff:.1f}GOPS/W(paper {ref['gops_per_w']:.2f})"
+                    f" err={(abs(eff-ref['gops_per_w'])/ref['gops_per_w'])*100:.2f}%"
+                ),
+            }
+        )
+    # FPGA baselines (reported; they define the paper's 91.86x / 17.21x klaims)
+    bit = em.PAPER_TABLE2["BiT"]
+    for name, ref in em.PAPER_TABLE2_BASELINES.items():
+        rows.append(
+            {
+                "name": f"table2/baseline/{name}",
+                "us_per_call": 0.0,
+                "derived": (
+                    f"gops={ref['gops']} eff={ref['gops_per_w']}GOPS/W"
+                    f" beta_speedup={bit['gops']/ref['gops']:.2f}x"
+                    f" beta_eff_gain={bit['gops_per_w']/ref['gops_per_w']:.2f}x"
+                ),
+            }
+        )
+    cpu = _cpu_bert_gops()
+    rows.append(
+        {
+            "name": "table2/CPU/this-container-fp32",
+            "us_per_call": 0.0,
+            "derived": f"gops={cpu:.2f} (paper i7 row: 6.69)"
+            f" beta_vs_this_cpu={bit['gops']/max(cpu,1e-9):.0f}x",
+        }
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.2f},{r['derived']}")

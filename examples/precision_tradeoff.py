@@ -1,0 +1,91 @@
+"""Fig. 5's OTHER axis: accuracy vs activation precision, by QAT.
+
+    PYTHONPATH=src python examples/precision_tradeoff.py [--steps 120]
+
+Trains the SAME tiny LM at W1A1 / W1A2 / W1A4 / W1A8 and reports final
+loss next to the calibrated hardware model's throughput/efficiency for that
+mode — reproducing the trade-off the paper's Fig. 5 demonstrates on BETA
+(efficiency rises, accuracy falls as activation bits shrink).
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, QuantConfig
+from repro.core import energy_model as em
+from repro.core.precision import MODES
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.optim import adamw
+from repro.runtime import train_loop as TL
+
+
+def build_cfg(act_bits: int) -> ArchConfig:
+    return ArchConfig(
+        name=f"tiny-lm-a{act_bits}",
+        family="dense",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=512,
+        vocab_size=512,
+        pattern_period=("g",),
+        ffn_type="gelu",
+        quant=QuantConfig(act_bits=act_bits, attn_act_bits=act_bits),
+        max_seq=512,
+    )
+
+
+def train_one(act_bits: int, steps: int, seed: int = 0) -> float:
+    cfg = build_cfg(act_bits)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    tcfg = TL.TrainConfig(
+        optimizer=adamw.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=steps)
+    )
+    step = TL.make_train_step(
+        cfg, tcfg, mesh, {"tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32)}
+    )
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8, seed=seed))
+    params, opt = TL.init_train_state(jax.random.PRNGKey(seed), cfg)
+    last = float("nan")
+    for _ in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.next().items()}
+        params, opt, m = step(params, opt, batch)
+        last = float(m["loss"])
+    return last
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+
+    wl = em.bert_base_qmm_workload()
+    oh = em.BENCHMARK_OVERHEADS["BiT"]
+    print(f"{'mode':6s} {'final_loss':>10s} {'GOPS':>8s} {'GOPS/W':>8s}")
+    results = []
+    for name in ("W1A8", "W1A4", "W1A2", "W1A1"):
+        mode = MODES[name]
+        loss = train_one(mode.act_bits, args.steps)
+        gops, _ = em.throughput_gops(wl, mode, em.ZCU102_BETA, oh)
+        eff = em.energy_efficiency(wl, mode, em.ZCU102_BETA, oh)
+        results.append((name, loss, gops, eff))
+        print(f"{name:6s} {loss:10.4f} {gops:8.1f} {eff:8.1f}")
+    losses = [r[1] for r in results]
+    effs = [r[3] for r in results]
+    print(
+        "[tradeoff] efficiency rises monotonically:",
+        all(effs[i] < effs[i + 1] for i in range(len(effs) - 1)),
+    )
+    print(
+        "[tradeoff] accuracy (lower loss) degrades toward W1A1:",
+        losses[-1] >= min(losses),
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Quickstart: BETA's computation-flow abstraction + QMM engine in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's Fig. 2 example end-to-end: affine-quantized operands,
+the naive full-precision flow, the abstracted integer flow, and the
+engine's precision modes — then shows the packed-weight serving layout.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flow_abstraction as FA
+from repro.core import packing
+from repro.core import qmm as QE
+from repro.core import quantization as Q
+from repro.core.precision import MODES
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, 256)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((256, 64)).astype(np.float32))
+
+    # 1) affine-quantize: activation -> alpha*X + gamma (W1A4 mode), weight
+    #    -> sign-binary (the paper's (aA + g*1) x bW example)
+    xq = Q.quantize_activation(x, bits=4)
+    wq = Q.binarize_weight(w)
+    print(f"activation: {xq.bits}-bit mantissa, scale={float(xq.scale):.4f}")
+    print(f"weight:     {wq.bits}-bit mantissa, per-channel scales {wq.scale.shape}")
+
+    # 2) the naive flow the paper replaces: dequantize -> FP matmul
+    naive = FA.qmm_dequant_reference(xq, wq)
+
+    # 3) the abstracted flow: integer MM + rank-1 corrections (exact!)
+    flow = QE.qmm(xq, wq, backend="mxu")
+    print("max |flow - naive| =", float(jnp.max(jnp.abs(flow - naive))))
+
+    # 4) op accounting (Fig. 2): N^3 Op -> 2N^3 Iop + (3N^2+2) Op
+    n = 64
+    print("naive:", FA.op_counts_naive(n, n, n))
+    print("flow: ", FA.op_counts_abstracted(n, n, n))
+
+    # 5) engine modes (Fig. 4) — one datapath, four precisions
+    for name, mode in MODES.items():
+        xq_m = Q.quantize_activation(x, mode.act_bits)
+        out = QE.qmm(xq_m, wq, backend="mxu", mode=mode)
+        err = float(jnp.max(jnp.abs(out - x @ w)))
+        print(f"{name}: pack_factor={mode.pack_factor} "
+              f"bitserial={mode.bitserial_cycles} quant_err={err:.3f}")
+
+    # 6) both QMM types: act x act (Q @ K^T) through the same engine
+    q_ = Q.quantize_activation(jnp.asarray(rng.standard_normal((8, 64)), jnp.float32), 8)
+    k_ = Q.quantize_activation(jnp.asarray(rng.standard_normal((64, 8)), jnp.float32), 8)
+    print("act x act err:", float(jnp.max(jnp.abs(
+        QE.qmm(q_, k_) - FA.qmm_dequant_reference(q_, k_)))))
+
+    # 7) serving layout: weights bit-packed 32-to-a-word in HBM
+    packed = wq.pack(axis=0)
+    print(f"packed weights: {packed.mantissa.shape} uint32 "
+          f"({w.size*4}B fp32 -> {packed.mantissa.size*4}B packed, "
+          f"{w.size*4/(packed.mantissa.size*4):.0f}x)")
+
+
+if __name__ == "__main__":
+    main()

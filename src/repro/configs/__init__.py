@@ -1,0 +1,48 @@
+"""Assigned-architecture configs (+ the paper's own benchmarks).
+
+Importing this package populates the registry; ``base.get_config(name)`` /
+``base.list_configs()`` are the public API.  ``--arch <id>`` anywhere in the
+launcher resolves through here.
+"""
+
+from repro.configs import base
+from repro.configs.base import ArchConfig, InputShape, LM_SHAPES, get_config, list_configs
+
+# one module per assigned architecture (registration side-effect)
+from repro.configs import (  # noqa: F401
+    bit_bert,
+    deepseek_v2_lite_16b,
+    deepseek_v3_671b,
+    gemma3_27b,
+    granite_8b,
+    internvl2_2b,
+    mamba2_130m,
+    mistral_nemo_12b,
+    qwen3_32b,
+    recurrentgemma_2b,
+    whisper_tiny,
+)
+
+#: The ten assigned architectures (dry-run / roofline grid rows).
+ASSIGNED = (
+    "recurrentgemma-2b",
+    "internvl2-2b",
+    "deepseek-v3-671b",
+    "deepseek-v2-lite-16b",
+    "whisper-tiny",
+    "mistral-nemo-12b",
+    "granite-8b",
+    "gemma3-27b",
+    "qwen3-32b",
+    "mamba2-130m",
+)
+
+__all__ = [
+    "ArchConfig",
+    "InputShape",
+    "LM_SHAPES",
+    "ASSIGNED",
+    "get_config",
+    "list_configs",
+    "base",
+]

@@ -1,0 +1,39 @@
+"""The paper's own benchmark models: BiT / BinaryBERT / BiBERT (BERT-base).
+
+[arXiv:2211.xx BiT / ACL'21 BinaryBERT / ICLR'22 BiBERT; paper Table II]
+12L d_model=768 12H d_ff=3072 vocab=30522, bidirectional encoder, seq 128
+(MNLI-m).  These drive the Table II / Fig. 5 reproduction benchmarks and the
+QAT example; activation precision is the configurable engine's knob
+(W1A1 / W1A2 / W1A4 / W1A8).
+"""
+
+from repro.configs.base import ArchConfig, QuantConfig, register
+
+def _bert(name: str, act_bits: int) -> ArchConfig:
+    return ArchConfig(
+        name=name,
+        family="encoder",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        d_ff=3072,
+        vocab_size=30522,
+        pattern_period=("g",),
+        ffn_type="gelu",
+        pos_embedding="learned",
+        causal=False,
+        quant=QuantConfig(
+            act_bits=act_bits,
+            attn_act_bits=act_bits,
+            kv_cache_bits=8,
+        ),
+        max_seq=512,
+        source="[paper Table II benchmarks]",
+    )
+
+
+CONFIG = register(_bert("bit-bert-base", 1))
+CONFIG_W1A2 = register(_bert("bit-bert-base-a2", 2))
+CONFIG_W1A4 = register(_bert("bit-bert-base-a4", 4))
+CONFIG_W1A8 = register(_bert("bit-bert-base-a8", 8))

@@ -1,0 +1,35 @@
+"""mamba2-130m — attention-free SSM with SSD (state-space duality) mixers.
+
+[arXiv:2405.21060; unverified]  24L d_model=768 vocab=50280, ssm_state=128,
+expand=2 (d_inner 1536), head_dim=64 (24 SSD heads), conv width 4.
+O(1) state per layer -> runs long_500k.
+
+BETA applicability (DESIGN.md §5): projections (in/out) are act x weight
+QMMs; the chunked SSD form's intra-chunk matmuls route through the
+act x act engine (beyond-paper extension); the inter-chunk state recurrence
+stays full-precision.
+"""
+
+from repro.configs.base import ArchConfig, QuantConfig, SSMConfig, register
+
+CONFIG = register(
+    ArchConfig(
+        name="mamba2-130m",
+        family="ssm",
+        n_layers=24,
+        d_model=768,
+        n_heads=24,  # SSD heads (d_inner / head_dim)
+        n_kv_heads=24,
+        d_head=64,
+        d_ff=0,  # no separate FFN in mamba2 blocks
+        vocab_size=50280,
+        pattern_period=("s",),
+        ffn_type="gelu",
+        pos_embedding="none",
+        tie_embeddings=True,
+        ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, n_groups=1),
+        quant=QuantConfig(act_bits=8, attn_act_bits=8, quantize_attention=False),
+        max_seq=1 << 20,
+        source="[arXiv:2405.21060; unverified]",
+    )
+)

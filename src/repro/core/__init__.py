@@ -1,0 +1,13 @@
+"""Core of the BETA reproduction: the paper's primary contribution in JAX.
+
+- ``packing``           bit-packed storage (uint32 lanes, bit-planes)
+- ``quantization``      QuantTensor + BiT-style quantizers (+ STE for QAT)
+- ``flow_abstraction``  the computation-flow rewrite (§III-A, Fig. 2)
+- ``precision``         the configurable engine's W1A{1,2,4,8} mode registry
+- ``qmm``               the QMM engine dispatcher (MXU / popcount / Pallas)
+- ``energy_model``      BETA cycle & energy model (Tables I/II, Fig. 5)
+"""
+
+from repro.core import flow_abstraction, packing, precision, qmm, quantization
+
+__all__ = ["flow_abstraction", "packing", "precision", "qmm", "quantization"]

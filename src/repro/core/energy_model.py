@@ -1,0 +1,270 @@
+"""Analytical cycle / energy model of the BETA accelerator.
+
+This container has no FPGA (and no TPU); the paper's evaluation artifacts —
+Table I (resource breakdown), Table II (throughput / power / energy
+efficiency) and Fig. 5 (precision <-> efficiency trade-off) — are reproduced
+through a structural model of the accelerator:
+
+* **Datapath** (§III-C): ``n_dpu`` DPUs, each unfolded over ``j_unfold``
+  elements per cycle at ``freq_hz``.  Data-packing multiplies the per-PE rate
+  by ``pack_factor`` (Fig. 4: 8/4/2/1 for A1/A2/A4/A8); act x act QMMs run
+  bit-serially, dividing the rate by ``act_bits``.  The compressor-tree loop
+  keeps the accumulation pipelined at 1 word/cycle (its entire point), so
+  streaming MACs run at peak; fill/drain is one tree latency per dot-product
+  row and is amortized.
+* **Buffer traffic**: operands are pre-loaded to the compute buffer
+  (§III-C); the load cost is ``operand_bits / load_bw_bits`` cycles and
+  overlaps compute only partially (``load_overlap``).
+* **Power**: static + per-mode dynamic power, calibrated once against the
+  paper's three measured benchmark powers (7.18 / 7.95 / 8.20 W) — the same
+  role SAIF-annotated switching activity plays in the paper's Vivado flow.
+
+The model's free parameters are calibrated in ``benchmarks/table2_comparison``
+against Table II and then *frozen*; Fig. 5's trend is a pure prediction of
+the calibrated model.  All op counts flow through
+``flow_abstraction.op_counts_*`` so the GOPS accounting matches the paper's
+(ops counted on the original full-precision MM).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, List, Literal, Tuple
+
+from repro.core.precision import PrecisionMode, get_mode
+
+__all__ = [
+    "BetaHardware",
+    "QMMShape",
+    "qmm_cycles",
+    "workload_cycles",
+    "throughput_gops",
+    "energy_efficiency",
+    "bert_base_qmm_workload",
+    "ZCU102_BETA",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BetaHardware:
+    """Structural parameters of a BETA instance (paper §IV-B)."""
+
+    n_dpu: int = 2
+    j_unfold: int = 256
+    freq_hz: float = 190e6
+    # Compute-buffer load path (bits per cycle from off-chip / weight buffer).
+    load_bw_bits: int = 2048
+    # Fraction of load cycles hidden under compute (double-buffering).
+    load_overlap: float = 0.8
+    # Calibrated power model: P = p_static + p_dyn_per_tmacs * (TMAC/s).
+    # Least-squares fit of Table II's three measured (power, rate) points —
+    # they are collinear to ~2 mW, which corroborates the linear model.
+    p_static_w: float = 0.6904
+    p_dyn_w_per_tmacs: float = 10.459
+
+    def peak_macs_per_cycle(self, mode: PrecisionMode, qmm_type: str) -> float:
+        base = self.n_dpu * self.j_unfold * mode.pack_factor
+        if qmm_type == "act_act":
+            return base / mode.bitserial_cycles
+        return base
+
+    def peak_gops(self, mode: PrecisionMode, qmm_type: str = "act_weight") -> float:
+        return 2.0 * self.peak_macs_per_cycle(mode, qmm_type) * self.freq_hz / 1e9
+
+
+ZCU102_BETA = BetaHardware()
+
+
+@dataclasses.dataclass(frozen=True)
+class QMMShape:
+    """One QMM in a workload: ``(M, K) @ (K, N)``, repeated ``count`` times."""
+
+    m: int
+    k: int
+    n: int
+    qmm_type: Literal["act_weight", "act_act"] = "act_weight"
+    count: int = 1
+
+    @property
+    def macs(self) -> int:
+        return self.m * self.k * self.n * self.count
+
+
+def qmm_cycles(shape: QMMShape, mode: PrecisionMode, hw: BetaHardware) -> float:
+    """Cycles for one QMM on the engine.
+
+    Compute: MACs *stream* at ``peak_macs_per_cycle``.  The compressor-tree
+    loop carries two partial accumulations in carry-save form and finalizes
+    through the carry-select adder asynchronously (§III-C, Fig. 3b) — this is
+    exactly what lets consecutive dot products share an unfolded word, so
+    there is no per-dot ceil-padding; only a pipeline fill of one tree depth
+    per QMM remains.
+    Load: activations enter the compute buffer at ``load_bw_bits``/cycle
+    (binary weights are resident in the weight buffer); double-buffering
+    hides ``load_overlap`` of it.
+    """
+    rate = hw.peak_macs_per_cycle(mode, shape.qmm_type)
+    compute = shape.macs / rate
+    fill = math.log2(hw.j_unfold) + 2  # compressor tree depth + CSA stage
+    act_bits_in = shape.m * shape.k * mode.act_bits
+    other_in = shape.k * shape.n * (
+        mode.act_bits if shape.qmm_type == "act_act" else 0  # weights resident
+    )
+    load = (act_bits_in + other_in) * shape.count / hw.load_bw_bits
+    exposed_load = load * (1.0 - hw.load_overlap)
+    return compute + fill * shape.count + exposed_load
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOverhead:
+    """Non-QMM work of one benchmark model (VPU epilogues + quantizers).
+
+    The three Table-II benchmarks are all BERT-base at W1A1 yet differ in
+    throughput (1241 / 1388 / 1436 GOPS) — the residual is each model's
+    full-precision epilogue volume (BiT's elastic per-token quantizers do the
+    most VPU work; BiBERT's bitwise Bi-Attention the least).  ``vpu_passes``
+    is the calibrated number of (seq x d_model)-sized full-precision passes
+    per layer executed on the 64-lane VPU.
+    """
+
+    name: str
+    seq: int = 128
+    d_model: int = 768
+    n_layers: int = 12
+    vpu_passes: float = 8.0
+    vpu_lanes: int = 64
+
+    def cycles(self) -> float:
+        return self.n_layers * self.vpu_passes * self.seq * self.d_model / self.vpu_lanes
+
+
+def workload_cycles(
+    shapes: Iterable[QMMShape],
+    mode: PrecisionMode,
+    hw: BetaHardware,
+    overhead: "ModelOverhead | None" = None,
+) -> float:
+    total = sum(qmm_cycles(s, mode, hw) for s in shapes)
+    if overhead is not None:
+        total += overhead.cycles()
+    return total
+
+
+def throughput_gops(
+    shapes: Iterable[QMMShape],
+    mode: PrecisionMode,
+    hw: BetaHardware = ZCU102_BETA,
+    overhead: "ModelOverhead | None" = None,
+) -> Tuple[float, float]:
+    """Returns (GOPS, latency_s).  Ops counted as 2*M*K*N per QMM — the
+    original MM's op count, matching the paper's accounting."""
+    shapes = list(shapes)
+    cycles = workload_cycles(shapes, mode, hw, overhead)
+    t = cycles / hw.freq_hz
+    total_ops = 2.0 * sum(s.macs for s in shapes)
+    return total_ops / t / 1e9, t
+
+
+def power_w(
+    shapes: Iterable[QMMShape],
+    mode: PrecisionMode,
+    hw: BetaHardware = ZCU102_BETA,
+    overhead: "ModelOverhead | None" = None,
+) -> float:
+    gops, t = throughput_gops(list(shapes), mode, hw, overhead)
+    tmacs = gops / 2.0 / 1e3  # tera-MACs/s
+    return hw.p_static_w + hw.p_dyn_w_per_tmacs * tmacs
+
+
+def energy_efficiency(
+    shapes: Iterable[QMMShape],
+    mode: PrecisionMode,
+    hw: BetaHardware = ZCU102_BETA,
+    overhead: "ModelOverhead | None" = None,
+) -> float:
+    """GOPS/W — the paper's headline metric."""
+    shapes = list(shapes)
+    gops, _ = throughput_gops(shapes, mode, hw, overhead)
+    return gops / power_w(shapes, mode, hw, overhead)
+
+
+def bert_base_qmm_workload(
+    seq: int = 128,
+    d_model: int = 768,
+    n_heads: int = 12,
+    d_ff: int = 3072,
+    n_layers: int = 12,
+) -> List[QMMShape]:
+    """The QMM inventory of one BERT-base encoder pass (the paper's
+    benchmarks BiT / BinaryBERT / BiBERT are all BERT-base on MNLI-m).
+
+    act x weight: QKV+output projections and both FFN matmuls.
+    act x act:    Q@K^T and P@V per head (the QMM type prior accelerators
+    don't support — §II)."""
+    d_head = d_model // n_heads
+    return [
+        QMMShape(seq, d_model, 3 * d_model, "act_weight", n_layers),  # QKV
+        QMMShape(seq, d_model, d_model, "act_weight", n_layers),  # attn out
+        QMMShape(seq, d_model, d_ff, "act_weight", n_layers),  # FFN up
+        QMMShape(seq, d_ff, d_model, "act_weight", n_layers),  # FFN down
+        QMMShape(seq, d_head, seq, "act_act", n_layers * n_heads),  # Q K^T
+        QMMShape(seq, seq, d_head, "act_act", n_layers * n_heads),  # P V
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Calibration against Table II (run once in benchmarks/table2_comparison,
+# frozen here; tests assert the frozen model reproduces the paper within 1%).
+# ---------------------------------------------------------------------------
+
+#: Paper Table II, BETA columns (W1A1 on ZCU102 @190 MHz, N=2, J=256).
+PAPER_TABLE2 = {
+    "BiT": {"gops": 1240.98, "power_w": 7.18, "gops_per_w": 172.41},
+    "BinaryBERT": {"gops": 1387.59, "power_w": 7.95, "gops_per_w": 174.59},
+    "BiBERT": {"gops": 1436.07, "power_w": 8.20, "gops_per_w": 175.23},
+}
+
+#: Paper Table II, baseline columns (same FPGA, traditional compute units).
+PAPER_TABLE2_BASELINES = {
+    "FP-32": {"gops": 13.51, "power_w": 11.64, "gops_per_w": 1.16},
+    "FIX-16": {"gops": 72.09, "power_w": 3.91, "gops_per_w": 18.42},
+}
+
+
+def calibrate_vpu_passes(
+    target_gops: float,
+    shapes: Iterable[QMMShape],
+    mode: PrecisionMode,
+    hw: BetaHardware = ZCU102_BETA,
+    seq: int = 128,
+    d_model: int = 768,
+    n_layers: int = 12,
+    vpu_lanes: int = 64,
+) -> float:
+    """Solve (closed form) for the per-layer VPU pass count that makes the
+    modeled throughput match a measured Table-II number."""
+    shapes = list(shapes)
+    total_ops = 2.0 * sum(s.macs for s in shapes)
+    cycles_needed = total_ops / (target_gops * 1e9) * hw.freq_hz
+    extra = cycles_needed - workload_cycles(shapes, mode, hw)
+    return extra * vpu_lanes / (n_layers * seq * d_model)
+
+
+def calibrate_power(points) -> Tuple[float, float]:
+    """Least-squares (p_static, p_dyn_per_tmacs) from (tmacs, watts) pairs."""
+    import numpy as np
+
+    pts = list(points)
+    a = np.array([[1.0, t] for t, _ in pts])
+    b = np.array([w for _, w in pts])
+    sol, *_ = np.linalg.lstsq(a, b, rcond=None)
+    return float(sol[0]), float(sol[1])
+
+
+#: Frozen calibration: per-benchmark VPU epilogue volume (see ModelOverhead).
+BENCHMARK_OVERHEADS = {
+    "BiT": ModelOverhead("BiT", vpu_passes=37.369),
+    "BinaryBERT": ModelOverhead("BinaryBERT", vpu_passes=17.756),
+    "BiBERT": ModelOverhead("BiBERT", vpu_passes=12.152),
+}

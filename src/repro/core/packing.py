@@ -1,0 +1,162 @@
+"""Bit-packing utilities: the storage substrate of BETA's QMM engine.
+
+BETA (Fig. 4) packs several low-bit values into one hardware word so a PE
+processes multiple multiplies per cycle.  On TPU the analogous win is HBM
+footprint / bandwidth: n-bit mantissas are stored ``32/n`` to a ``uint32``
+lane and unpacked on the fly inside the QMM kernel (HBM -> VMEM traffic for
+binary weights drops 16x vs bf16).
+
+Conventions
+-----------
+* Mantissas are **unsigned** n-bit integers in ``[0, 2**n)`` (the paper's
+  ``x`` in ``alpha*x + gamma``).  Sign-binarized weights ``+-alpha`` are
+  expressed as mantissa ``{0,1}`` with ``scale=2*alpha, offset=-alpha``.
+* Packing is always along one axis (for QMM operands: the *reduction* dim),
+  little-endian within the word: value ``i`` of a word occupies bits
+  ``[i*n, (i+1)*n)``.
+* Packed length is ``ceil(L / (32//n))``; the tail is zero-padded.  Zero
+  mantissa padding is benign for the integer MM as long as row/col-sum
+  corrections use the *logical* K (handled in flow_abstraction).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "values_per_word",
+    "packed_len",
+    "pack_bits",
+    "unpack_bits",
+    "to_bitplanes",
+    "from_bitplanes",
+    "pack_bitplanes",
+]
+
+WORD_BITS = 32
+_SUPPORTED_BITS = (1, 2, 4, 8, 16)
+
+
+def values_per_word(bits: int) -> int:
+    """Number of ``bits``-wide mantissas per uint32 word."""
+    if bits not in _SUPPORTED_BITS:
+        raise ValueError(f"bits must be one of {_SUPPORTED_BITS}, got {bits}")
+    return WORD_BITS // bits
+
+
+def packed_len(length: int, bits: int) -> int:
+    """Packed size along the packing axis."""
+    vpw = values_per_word(bits)
+    return -(-length // vpw)
+
+
+def _move_axis_last(x: jax.Array, axis: int) -> jax.Array:
+    return jnp.moveaxis(x, axis, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "axis"))
+def pack_bits(x: jax.Array, bits: int, axis: int = -1) -> jax.Array:
+    """Pack unsigned ``bits``-wide mantissas along ``axis`` into uint32 words.
+
+    Args:
+      x: integer array with values in ``[0, 2**bits)``.
+      bits: mantissa width (1, 2, 4, 8 or 16).
+      axis: axis to pack along.
+
+    Returns:
+      uint32 array; ``axis`` shrinks from ``L`` to ``ceil(L / (32//bits))``.
+    """
+    vpw = values_per_word(bits)
+    x = _move_axis_last(x, axis).astype(jnp.uint32) & jnp.uint32((1 << bits) - 1)
+    length = x.shape[-1]
+    pl_ = packed_len(length, bits)
+    pad = pl_ * vpw - length
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    x = x.reshape(x.shape[:-1] + (pl_, vpw))
+    shifts = jnp.arange(vpw, dtype=jnp.uint32) * bits
+    packed = jnp.bitwise_or.reduce(x << shifts, axis=-1).astype(jnp.uint32)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "length", "axis", "dtype"))
+def unpack_bits(
+    packed: jax.Array,
+    bits: int,
+    length: int,
+    axis: int = -1,
+    dtype: jnp.dtype = jnp.int32,
+) -> jax.Array:
+    """Inverse of :func:`pack_bits`.
+
+    Args:
+      packed: uint32 packed array.
+      bits: mantissa width.
+      length: logical (unpadded) length along ``axis``.
+      axis: packed axis.
+      dtype: output dtype. Default int32 is safe for every ``bits``; pass
+        int8 only when values are known to fit (e.g. bits <= 7, or re-centered
+        signed mantissas) — that is the layout the MXU integer path wants.
+    """
+    vpw = values_per_word(bits)
+    p = _move_axis_last(packed, axis)
+    shifts = jnp.arange(vpw, dtype=jnp.uint32) * bits
+    vals = (p[..., None] >> shifts) & jnp.uint32((1 << bits) - 1)
+    vals = vals.reshape(p.shape[:-1] + (p.shape[-1] * vpw,))[..., :length]
+    vals = vals.astype(dtype)
+    return jnp.moveaxis(vals, -1, axis) if axis != -1 else vals
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def to_bitplanes(x: jax.Array, bits: int) -> jax.Array:
+    """Decompose unsigned mantissas into ``bits`` binary planes.
+
+    ``x = sum_i 2**i * plane[i]`` — the paper's bit-serial schedule (Fig. 4)
+    traverses exactly these planes, one per cycle.
+
+    Returns:
+      uint8 array of shape ``(bits,) + x.shape`` with values in {0, 1}.
+    """
+    x = x.astype(jnp.uint32)
+    shifts = jnp.arange(bits, dtype=jnp.uint32).reshape((bits,) + (1,) * x.ndim)
+    return ((x[None] >> shifts) & 1).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def from_bitplanes(planes: jax.Array, bits: int) -> jax.Array:
+    """Inverse of :func:`to_bitplanes` (returns uint32)."""
+    weights = (jnp.uint32(1) << jnp.arange(bits, dtype=jnp.uint32)).reshape(
+        (bits,) + (1,) * (planes.ndim - 1)
+    )
+    return jnp.sum(planes.astype(jnp.uint32) * weights, axis=0, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "axis"))
+def pack_bitplanes(x: jax.Array, bits: int, axis: int = -1) -> jax.Array:
+    """Bit-plane decompose then 1-bit-pack each plane along ``axis``.
+
+    Output shape: ``(bits,) + packed_shape`` — the operand layout consumed by
+    the bit-serial act x act QMM kernel.
+    """
+    planes = to_bitplanes(x, bits)
+    pack_axis = axis if axis < 0 else axis + 1
+    return pack_bits(planes, 1, axis=pack_axis)
+
+
+def pack_bits_np(x: np.ndarray, bits: int, axis: int = -1) -> np.ndarray:
+    """NumPy twin of :func:`pack_bits` for checkpoint/serialization paths."""
+    vpw = values_per_word(bits)
+    x = np.moveaxis(np.asarray(x), axis, -1).astype(np.uint32) & np.uint32((1 << bits) - 1)
+    length = x.shape[-1]
+    pl_ = packed_len(length, bits)
+    pad = pl_ * vpw - length
+    if pad:
+        x = np.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    x = x.reshape(x.shape[:-1] + (pl_, vpw))
+    shifts = (np.arange(vpw, dtype=np.uint32) * bits).astype(np.uint32)
+    packed = np.bitwise_or.reduce(x << shifts, axis=-1).astype(np.uint32)
+    return np.moveaxis(packed, -1, axis)

@@ -1,0 +1,153 @@
+"""The QMM engine: precision-configurable quantized matmul dispatch.
+
+This is the software counterpart of BETA's QMM engine (§III-C): one entry
+point that serves both QMM types (activation x weight, activation x
+activation) at every supported activation precision, on top of the
+computation-flow abstraction (``flow_abstraction.qmm_flow``).
+
+Backends for the integer MM core:
+
+* ``"mxu"``      — int8 ``lax.dot_general`` (int32 accum). TPU-native: the
+                   systolic array does 8-bit integer MACs at ~2x bf16 rate.
+                   Default for model forward passes and the dry-run path.
+* ``"popcount"`` — AND+popcount over bit-packed uint32 lanes — the faithful
+                   analogue of BETA's XNOR-popcount DPU. (With the unified
+                   unsigned-mantissa form, +-1 XNOR-popcount becomes {0,1}
+                   AND-popcount; the affine epilogue absorbs the difference,
+                   which is why one datapath serves both operand kinds.)
+                   Multi-bit operands run bit-serially over planes (Fig. 4).
+* ``"pallas"``   — the Pallas TPU kernels in ``repro.kernels`` (fused
+                   unpack -> MXU dot with VMEM tiling); falls back to
+                   interpret mode off-TPU.
+
+All backends return results that agree exactly (integer math) and match the
+dequantized FP reference to fp32 rounding — property-tested.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flow_abstraction, packing
+from repro.core.precision import PrecisionMode
+from repro.core.quantization import QuantTensor
+
+__all__ = ["qmm", "and_popcount_matmul", "popcount_int_matmul"]
+
+# Columns of the right operand processed per popcount sweep; bounds the
+# broadcast intermediate to n_chunk * M * Kw words (VMEM-sized blocks in the
+# Pallas kernel play the same role).
+_POPCOUNT_N_CHUNK = 256
+
+
+def and_popcount_matmul(a_packed: jax.Array, b_packed: jax.Array) -> jax.Array:
+    """Binary integer MM over bit-packed operands.
+
+    ``out[m, n] = sum_w popcount(a[m, w] & b[w, n])`` — BETA's DPU datapath
+    expressed in lane-parallel jnp (the Pallas kernel tiles exactly this).
+
+    Args:
+      a_packed: uint32 ``(..., M, Kw)`` — K packed along the last axis.
+      b_packed: uint32 ``(..., Kw, N)`` — K packed along the second-to-last.
+
+    Returns:
+      int32 ``(..., M, N)``.
+    """
+    m = a_packed.shape[-2]
+    n = b_packed.shape[-1]
+    out_chunks = []
+    for s in range(0, n, _POPCOUNT_N_CHUNK):
+        b_blk = jax.lax.slice_in_dim(b_packed, s, min(s + _POPCOUNT_N_CHUNK, n), axis=-1)
+        # (..., M, 1, Kw) & (..., 1, Nc, Kw) -> popcount -> sum over Kw.
+        joint = a_packed[..., :, None, :] & jnp.swapaxes(b_blk, -1, -2)[..., None, :, :]
+        out_chunks.append(
+            jnp.sum(jax.lax.population_count(joint).astype(jnp.int32), axis=-1)
+        )
+    return jnp.concatenate(out_chunks, axis=-1) if len(out_chunks) > 1 else out_chunks[0]
+
+
+def popcount_int_matmul(
+    x: jax.Array, y: jax.Array, x_bits: int, y_bits: int
+) -> jax.Array:
+    """``int_matmul`` backend built from AND-popcount + bit-serial planes.
+
+    Accepts *unpacked* unsigned mantissas (the ``qmm_flow`` contract), packs
+    bit-planes, and accumulates ``sum_ij 2^(i+j) popcount-MM(X_i, Y_j)`` —
+    the paper's bit-serial schedule.  Exact for unsigned mantissas; callers
+    must not pre-recenter (use ``qmm(..., backend='popcount')`` which skips
+    re-centering).
+    """
+    a_planes = packing.pack_bitplanes(x.astype(jnp.uint32), x_bits, axis=-1)
+    b_planes = packing.pack_bitplanes(y.astype(jnp.uint32), y_bits, axis=-2)
+    total = None
+    for i in range(x_bits):
+        for j in range(y_bits):
+            part = and_popcount_matmul(a_planes[i], b_planes[j]) << (i + j)
+            total = part if total is None else total + part
+    return total
+
+
+def qmm(
+    x: QuantTensor,
+    w: QuantTensor,
+    *,
+    backend: str = "auto",
+    mode: Optional[PrecisionMode] = None,
+    w_colsum: Optional[jax.Array] = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Quantized matmul through the flow abstraction, backend-dispatched.
+
+    Args:
+      x: left operand ``(..., M, K)`` QuantTensor.
+      w: right operand ``(K, N)`` or ``(..., K, N)`` QuantTensor.
+      backend: "auto" | "mxu" | "popcount" | "pallas".
+      mode: optional PrecisionMode for engine-config asserts.
+      w_colsum: precomputed integer colsum of the (re-centered) right mantissa.
+      out_dtype: epilogue dtype.
+    """
+    if mode is not None:
+        if (x.bits, w.bits) not in {
+            (mode.act_bits, mode.weight_bits),
+            (mode.act_bits, mode.act_bits),
+        }:
+            raise ValueError(
+                f"operands W{w.bits}A{x.bits} do not match engine mode {mode.name}"
+            )
+    if backend == "auto":
+        backend = "mxu"
+    if backend == "mxu":
+        return flow_abstraction.qmm_flow(
+            x, w, int_matmul=None, w_colsum=w_colsum, out_dtype=out_dtype
+        )
+    if backend == "popcount":
+        # Popcount path needs unsigned planes: bypass re-centering by running
+        # the flow abstraction on the raw mantissas with a popcount core.
+        return _qmm_flow_unsigned(x, w, popcount_int_matmul, out_dtype)
+    if backend == "pallas":
+        from repro.kernels import ops as kernel_ops  # lazy: avoid cycle
+
+        return kernel_ops.qmm_pallas(x, w, w_colsum=w_colsum, out_dtype=out_dtype)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def _qmm_flow_unsigned(x: QuantTensor, w: QuantTensor, int_matmul, out_dtype):
+    """Flow abstraction without the signed re-centering (popcount path)."""
+    x1 = x.unpack(dtype=jnp.int32).mantissa
+    x2 = w.unpack(dtype=jnp.int32).mantissa
+    k = x1.shape[-1]
+    a1 = jnp.asarray(x.scale, out_dtype)
+    g1 = jnp.asarray(x.offset, out_dtype)
+    a2 = jnp.asarray(w.scale, out_dtype)
+    g2 = jnp.asarray(w.offset, out_dtype)
+    xy = int_matmul(x1, x2, x.bits, w.bits).astype(out_dtype)
+    out = xy * (a1 * a2)
+    row = jnp.sum(x1, axis=-1, dtype=jnp.int32)[..., None].astype(out_dtype)
+    out = out + (a1 * g2) * row
+    col = jnp.sum(x2, axis=-2, dtype=jnp.int32)[..., None, :].astype(out_dtype)
+    out = out + (g1 * a2) * col
+    return out + g1 * g2 * jnp.asarray(k, out_dtype)

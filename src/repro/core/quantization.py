@@ -1,0 +1,228 @@
+"""Affine quantization for binary Transformers (BiT / BinaryBERT / BiBERT style).
+
+The paper's operand model (§III-A): every QMM operand is ``alpha * x + gamma``
+with full-precision coefficient ``alpha``, offset ``gamma`` and an unsigned
+n-bit integer mantissa ``x``.  This module provides:
+
+* :class:`QuantTensor` — a pytree carrying ``(mantissa, scale, offset, bits)``,
+  optionally bit-packed along its reduction axis.
+* quantizers — sign binarization with XNOR-Net/BiT per-channel scales for
+  weights, elastic affine quantization for activations, both with
+  straight-through estimators so the same code path serves QAT training.
+
+Mantissa convention: unsigned ``x in [0, 2**bits)``.  Sign binarization
+``w_hat = alpha * sign(w)`` is expressed as ``scale=2*alpha, offset=-alpha``,
+mantissa ``(sign(w)+1)/2 in {0,1}`` — this keeps one unified affine form for
+every precision and both QMM operand types, exactly the paper's abstraction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+__all__ = [
+    "QuantTensor",
+    "ste_round",
+    "quantize_activation",
+    "binarize_weight",
+    "quantize_weight",
+    "dequantize",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantTensor:
+    """An affine-quantized tensor ``alpha * x + gamma``.
+
+    Attributes:
+      mantissa: unsigned integer mantissa. If ``packed`` is set, dtype is
+        uint32 and the ``packed_axis`` dim holds ``ceil(L / (32//bits))``
+        words; otherwise an int8/int32 array of logical shape.
+      scale: ``alpha`` — scalar () or per-channel (broadcastable to the
+        *output* of dequantize).
+      offset: ``gamma`` — scalar () or per-channel.
+      bits: mantissa width (static).
+      packed: whether ``mantissa`` is bit-packed (static).
+      packed_axis: axis that was packed (static; conventionally the reduction
+        dim of the QMM this tensor feeds).
+      length: logical length of the packed axis (static; needed to unpack).
+    """
+
+    mantissa: jax.Array
+    scale: jax.Array
+    offset: jax.Array
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    packed: bool = dataclasses.field(default=False, metadata=dict(static=True))
+    packed_axis: int = dataclasses.field(default=-1, metadata=dict(static=True))
+    length: Optional[int] = dataclasses.field(default=None, metadata=dict(static=True))
+
+    @property
+    def logical_shape(self) -> tuple:
+        if not self.packed:
+            return self.mantissa.shape
+        shape = list(self.mantissa.shape)
+        shape[self.packed_axis] = self.length
+        return tuple(shape)
+
+    def unpack(self, dtype=jnp.int32) -> "QuantTensor":
+        """Return an unpacked view (no-op if already unpacked)."""
+        if not self.packed:
+            return self
+        m = packing.unpack_bits(
+            self.mantissa, self.bits, self.length, axis=self.packed_axis, dtype=dtype
+        )
+        return dataclasses.replace(
+            self, mantissa=m, packed=False, packed_axis=-1, length=None
+        )
+
+    def pack(self, axis: int) -> "QuantTensor":
+        """Bit-pack the mantissa along ``axis`` (reduction dim by convention)."""
+        if self.packed:
+            return self
+        m = packing.pack_bits(self.mantissa, self.bits, axis=axis)
+        return dataclasses.replace(
+            self,
+            mantissa=m,
+            packed=True,
+            packed_axis=axis,
+            length=self.mantissa.shape[axis],
+        )
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        x = self.unpack().mantissa.astype(dtype)
+        return x * self.scale.astype(dtype) + self.offset.astype(dtype)
+
+
+def dequantize(q: QuantTensor, dtype=jnp.float32) -> jax.Array:
+    return q.dequantize(dtype)
+
+
+def recenter(q: QuantTensor) -> QuantTensor:
+    """Shift an unsigned mantissa to the signed range (exact, affine-absorbed).
+
+    ``alpha*x + gamma == alpha*(x - c) + (gamma + alpha*c)`` with
+    ``c = 2**(bits-1)``.  After the shift every mantissa fits int8, so the MXU
+    integer path applies for all supported precisions, and worst-case int32
+    accumulator growth drops 4x.  1-bit operands pass through unchanged (the
+    packed {0,1} form feeds the popcount/bit-packed kernels directly).
+    """
+    if q.bits <= 1:
+        return q
+    c = 2 ** (q.bits - 1)
+    m = q.unpack(dtype=jnp.int32).mantissa - c
+    return dataclasses.replace(
+        q,
+        mantissa=m.astype(jnp.int8),
+        offset=q.offset + q.scale * c,
+        packed=False,
+        packed_axis=-1,
+        length=None,
+    )
+
+
+def ste_round(x: jax.Array) -> jax.Array:
+    """Round with a straight-through gradient (identity backward)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def _ste_clip(x: jax.Array, lo, hi) -> jax.Array:
+    """Clip whose gradient is 1 inside [lo, hi] and 0 outside (standard QAT)."""
+    return jnp.clip(x, lo, hi)
+
+
+def quantize_activation(
+    x: jax.Array,
+    bits: int,
+    scale: Optional[jax.Array] = None,
+    offset: Optional[jax.Array] = None,
+    per_channel_axis: Optional[int] = None,
+) -> QuantTensor:
+    """Elastic affine activation quantization (BiT §3.2).
+
+    ``q = round(clip((x - gamma) / alpha, 0, 2**bits - 1))``; dequantized value
+    is ``alpha * q + gamma``.  ``alpha``/``gamma`` may be learned parameters
+    (passed in) or derived from the batch statistics (calibration mode) when
+    omitted.  Gradients flow to ``x`` (STE through round/clip) and, when they
+    are traced parameters, to ``scale``/``offset`` as in learned step-size
+    quantization.
+
+    Args:
+      x: activations (any float dtype).
+      bits: target precision (1, 2, 4, 8).
+      scale: optional alpha. Derived as ``(max-min)/(2**bits-1)`` if None.
+      offset: optional gamma. Derived as ``min`` if None.
+      per_channel_axis: if given, calibration statistics are taken per this
+        axis (kept); otherwise per-tensor.
+    """
+    qmax = float(2**bits - 1)
+    if scale is None or offset is None:
+        if per_channel_axis is None:
+            reduce_axes = tuple(range(x.ndim))
+            keepdims = False  # scalar stats broadcast against any rank
+        else:
+            axis = per_channel_axis % x.ndim
+            reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+            keepdims = True
+        x_det = jax.lax.stop_gradient(x)
+        lo = jnp.min(x_det, axis=reduce_axes, keepdims=keepdims)
+        hi = jnp.max(x_det, axis=reduce_axes, keepdims=keepdims)
+        derived_scale = jnp.maximum((hi - lo) / qmax, 1e-8)
+        scale = derived_scale if scale is None else scale
+        offset = lo if offset is None else offset
+    scale = jnp.asarray(scale, x.dtype)
+    offset = jnp.asarray(offset, x.dtype)
+    q_float = ste_round(_ste_clip((x - offset) / scale, 0.0, qmax))
+    mantissa = jax.lax.stop_gradient(q_float).astype(jnp.uint8 if bits <= 8 else jnp.int32)
+    return QuantTensor(mantissa=mantissa, scale=scale, offset=offset, bits=bits)
+
+
+def binarize_weight(w: jax.Array, per_channel_axis: int = -1) -> QuantTensor:
+    """Sign binarization with analytic optimal scale (XNOR-Net / BiT).
+
+    ``w_hat = alpha * sign(w)`` with ``alpha = mean(|w|)`` reduced over the
+    *reduction* dim (axis -2) only — per-out-channel for 2D ``(K, N)``
+    weights and per-(expert, out-channel) for stacked ``(E, K, N)`` MoE
+    weights.  Expressed in the unified affine form: mantissa
+    ``(sign(w)+1)/2 in {0,1}``, ``scale = 2*alpha``, ``offset = -alpha``.
+    """
+    del per_channel_axis  # kept for API compat; scale is always per axis -2
+    alpha = jnp.mean(jnp.abs(jax.lax.stop_gradient(w)), axis=-2, keepdims=True)
+    alpha = jnp.maximum(alpha, 1e-8)
+    bit = (jax.lax.stop_gradient(jnp.sign(w)) >= 0).astype(jnp.uint8)
+    return QuantTensor(mantissa=bit, scale=2.0 * alpha, offset=-alpha, bits=1)
+
+
+def quantize_weight(w: jax.Array, bits: int, per_channel_axis: int = -1) -> QuantTensor:
+    """n-bit symmetric-range affine weight quantization (binary when bits=1)."""
+    if bits == 1:
+        return binarize_weight(w, per_channel_axis)
+    return quantize_activation(w, bits, per_channel_axis=per_channel_axis)
+
+
+def fake_quant(x: jax.Array, bits: int, **kw) -> jax.Array:
+    """Quantize-dequantize with STE — the float-domain QAT forward.
+
+    Training uses this (gradients flow); serving uses the integer mantissas
+    through the QMM engine.  Property tests assert both paths agree.
+    """
+    q = quantize_activation(x, bits, **kw)
+    # Reconstruct in float WITHOUT dropping the gradient: redo the affine with
+    # the STE'd q_float rather than the stop-gradient mantissa.
+    qmax = float(2**bits - 1)
+    q_float = ste_round(_ste_clip((x - q.offset) / q.scale, 0.0, qmax))
+    return q_float * q.scale + q.offset
+
+
+def fake_binarize_weight(w: jax.Array, per_channel_axis: int = -1) -> jax.Array:
+    """Float-domain sign binarization with STE (for QAT train_step)."""
+    del per_channel_axis  # scale per reduction dim (axis -2), as binarize_weight
+    alpha = jnp.mean(jnp.abs(w), axis=-2, keepdims=True)
+    sgn = w + jax.lax.stop_gradient(jnp.where(w >= 0, 1.0, -1.0).astype(w.dtype) - w)
+    return jax.lax.stop_gradient(alpha) * sgn

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: bit-serial multi-bit act x act QMM (paper Fig. 4).
+
+BETA runs a ``Wa x Aa`` activation x activation product by traversing one
+operand bit-plane per cycle on the binary engine and shifting partial
+results into place: ``A @ B = sum_ij 2^(i+j) (A_i (x) B_j)``.  This kernel is
+that schedule with the planes unrolled inside one VMEM-resident block: the
+(i, j) plane pairs reuse the same operand tiles, so packed bits are fetched
+from HBM exactly once (the compute-buffer reuse idea of §III-C).
+
+Blocking: grid = (M/bm, N/bn, Kw/bkw), K innermost; operand tiles carry the
+plane axis whole (a_bits, b_bits <= 8, so worst case 8x8 = 64 plane pairs of
+AND+popcount work per tile — still VPU-bound, as on BETA where the same pass
+count shows up as `accumulation times`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bitserial_qmm", "DEFAULT_BLOCK"]
+
+DEFAULT_BLOCK = (64, 128, 32)  # bm, bn, bkw
+
+
+def _kernel(a_ref, b_ref, o_ref, *, a_bits: int, b_bits: int, bkw: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    for i in range(a_bits):  # static unroll: the bit-serial schedule
+        a_i = a_ref[i]  # (bm, bkw) uint32
+        for j in range(b_bits):
+            b_j = b_ref[j]  # (bkw, bn) uint32
+
+            def word_step(w, inner, a_i=a_i, b_j=b_j):
+                aw = jax.lax.dynamic_slice_in_dim(a_i, w, 1, axis=1)
+                bw = jax.lax.dynamic_slice_in_dim(b_j, w, 1, axis=0)
+                joint = jnp.bitwise_and(aw, bw)
+                return inner + jax.lax.population_count(joint).astype(jnp.int32)
+
+            part = jax.lax.fori_loop(0, bkw, word_step, jnp.zeros(o_ref.shape, jnp.int32))
+            acc = acc + (part << (i + j))
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def bitserial_qmm(
+    a_planes: jax.Array,
+    b_planes: jax.Array,
+    *,
+    block=DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Multi-bit integer MM from packed bit-planes.
+
+    Args:
+      a_planes: uint32 ``(a_bits, M, Kw)`` — left mantissa bit-planes,
+        1-bit-packed along the last axis.
+      b_planes: uint32 ``(b_bits, Kw, N)`` — right mantissa bit-planes,
+        packed along axis -2.
+      block: (bm, bn, bkw).
+      interpret: CPU validation mode.
+
+    Returns:
+      int32 ``(M, N)`` == ``A @ B`` of the original multi-bit mantissas.
+    """
+    a_bits, m, kw = a_planes.shape
+    b_bits, kw2, n = b_planes.shape
+    if kw != kw2:
+        raise ValueError(f"packed-K mismatch: {a_planes.shape} vs {b_planes.shape}")
+    bm, bn, bkw = block
+    if m % bm or n % bn or kw % bkw:
+        raise ValueError(f"shapes ({m},{kw},{n}) not multiples of block {block}")
+
+    grid = (m // bm, n // bn, kw // bkw)
+    return pl.pallas_call(
+        functools.partial(_kernel, a_bits=a_bits, b_bits=b_bits, bkw=bkw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((a_bits, bm, bkw), lambda i, j, kk: (0, i, kk)),
+            pl.BlockSpec((b_bits, bkw, bn), lambda i, j, kk: (0, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(a_planes, b_planes)

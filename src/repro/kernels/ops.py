@@ -1,0 +1,189 @@
+"""jit'd wrappers around the Pallas kernels: padding, dispatch, epilogues.
+
+Public entry points take logical (unpadded) shapes, pad to kernel block
+multiples, invoke the kernel, slice back, and (for the QuantTensor entry)
+apply the flow-abstraction epilogue.  ``interpret`` defaults to
+auto-detection: real kernels on TPU, interpret mode elsewhere — the same
+switch the model layer uses.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flow_abstraction, packing, quantization
+from repro.core.quantization import QuantTensor
+from repro.kernels import binary_qmm as _bq
+from repro.kernels import bitserial_qmm as _bs
+from repro.kernels import popcount_qmm as _pq
+
+__all__ = [
+    "on_tpu",
+    "binary_qmm_int",
+    "popcount_qmm_int",
+    "bitserial_qmm_int",
+    "qmm_pallas",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    return (not on_tpu()) if interpret is None else interpret
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def binary_qmm_int(
+    a: jax.Array,
+    w_packed: jax.Array,
+    k: int,
+    *,
+    block=_bq.DEFAULT_BLOCK,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """``a (M, K) int8 @ unpack(w_packed) (K, N)`` with auto-padding.
+
+    Zero padding is exact: padded activation columns hit padded (zero) weight
+    rows; padded rows/cols are sliced off.
+    """
+    bm, bn, bk = block
+    m, _ = a.shape
+    n = w_packed.shape[1]
+    a_p = _pad_to(_pad_to(a, 0, bm), 1, bk)
+    kp = a_p.shape[1]
+    # pad packed weights along words to kp/32, then columns to bn
+    w_p = _pad_to(_pad_to(w_packed, 0, kp // 32), 1, bn)
+    out = _bq.binary_qmm(
+        a_p, w_p, k=kp, block=block, interpret=_auto_interpret(interpret)
+    )
+    return out[:m, :n]
+
+
+def popcount_qmm_int(
+    a_packed: jax.Array,
+    b_packed: jax.Array,
+    *,
+    block=_pq.DEFAULT_BLOCK,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Binary x binary over packed operands with auto-padding (M, N, Kw)."""
+    bm, bn, bkw = block
+    m, kw = a_packed.shape
+    n = b_packed.shape[1]
+    a_p = _pad_to(_pad_to(a_packed, 0, bm), 1, bkw)
+    b_p = _pad_to(_pad_to(b_packed, 0, a_p.shape[1]), 1, bn)
+    out = _pq.popcount_qmm(a_p, b_p, block=block, interpret=_auto_interpret(interpret))
+    return out[:m, :n]
+
+
+def bitserial_qmm_int(
+    a_planes: jax.Array,
+    b_planes: jax.Array,
+    *,
+    block=_bs.DEFAULT_BLOCK,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Multi-bit act x act from packed planes with auto-padding."""
+    bm, bn, bkw = block
+    _, m, kw = a_planes.shape
+    n = b_planes.shape[2]
+    a_p = _pad_to(_pad_to(a_planes, 1, bm), 2, bkw)
+    b_p = _pad_to(_pad_to(b_planes, 1, a_p.shape[2]), 2, bn)
+    out = _bs.bitserial_qmm(a_p, b_p, block=block, interpret=_auto_interpret(interpret))
+    return out[:m, :n]
+
+
+def qmm_pallas(
+    x: QuantTensor,
+    w: QuantTensor,
+    *,
+    w_colsum: Optional[jax.Array] = None,
+    out_dtype=jnp.float32,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """QuantTensor QMM routed through the Pallas kernels + flow epilogue.
+
+    Dispatch (mirrors BETA's mode table, Fig. 4):
+      * weight_bits == 1 and act mantissa int8-representable -> binary_qmm
+        (fused unpack + MXU int8) — act x weight, any act precision.
+      * 1-bit x 1-bit -> popcount_qmm on fully packed operands.
+      * multi-bit act x act -> bitserial_qmm over bit-planes.
+
+    Only rank-2 operands hit the kernels; callers flatten leading batch dims
+    (the model layer does).  Falls back to the jnp paths for other cases.
+    """
+    x_l = x.logical_shape
+    w_l = w.logical_shape
+    if len(w_l) != 2 or len(x_l) != 2:
+        raise ValueError("qmm_pallas expects rank-2 operands; flatten batch dims")
+    k = x_l[-1]
+
+    if x.bits == 1 and w.bits == 1:
+        a_packed = (
+            x.mantissa if x.packed else packing.pack_bits(x.mantissa, 1, axis=-1)
+        )
+        b_packed = (
+            w.mantissa if w.packed else packing.pack_bits(w.mantissa, 1, axis=0)
+        )
+        xy = popcount_qmm_int(a_packed, b_packed, interpret=interpret)
+        return _epilogue(x, w, xy, k, w_colsum, out_dtype)
+
+    if w.bits == 1:
+        # act x weight: re-center activations (exact), unpack to int8.
+        xr = quantization.recenter(x)
+        a8 = xr.unpack(dtype=jnp.int8).mantissa
+        b_packed = (
+            w.mantissa if w.packed else packing.pack_bits(w.mantissa, 1, axis=0)
+        )
+        xy = binary_qmm_int(a8, b_packed, k, interpret=interpret)
+        return _epilogue(xr, w, xy, k, w_colsum, out_dtype)
+
+    # multi-bit act x act: bit-serial planes (unsigned mantissas).
+    a_planes = packing.pack_bitplanes(
+        x.unpack(dtype=jnp.int32).mantissa.astype(jnp.uint32), x.bits, axis=-1
+    )
+    b_planes = packing.pack_bitplanes(
+        w.unpack(dtype=jnp.int32).mantissa.astype(jnp.uint32), w.bits, axis=-2
+    )
+    xy = bitserial_qmm_int(a_planes, b_planes, interpret=interpret)
+    return _epilogue(x, w, xy, k, w_colsum, out_dtype)
+
+
+def _epilogue(x, w, xy, k, w_colsum, out_dtype):
+    """Flow-abstraction corrections on the kernel's integer MM output.
+
+    Valid for any mantissa representation (signed/unsigned) because the
+    affine identity holds verbatim — re-centering only moves the offsets.
+    ``w_colsum``, when provided, must be the colsum of the mantissas exactly
+    as the kernel consumed them (weight_corrections() handles this).
+    """
+    x1 = x.unpack(dtype=jnp.int32).mantissa
+    a1 = jnp.asarray(x.scale, out_dtype)
+    g1 = jnp.asarray(x.offset, out_dtype)
+    a2 = jnp.asarray(w.scale, out_dtype)
+    g2 = jnp.asarray(w.offset, out_dtype)
+    out = xy.astype(out_dtype) * (a1 * a2)
+    row = jnp.sum(x1, axis=-1, dtype=jnp.int32)[..., None].astype(out_dtype)
+    out = out + (a1 * g2) * row
+    col = (
+        w_colsum
+        if w_colsum is not None
+        else jnp.sum(w.unpack(dtype=jnp.int32).mantissa, axis=-2, dtype=jnp.int32)
+    )
+    out = out + (g1 * a2) * col[..., None, :].astype(out_dtype)
+    return out + g1 * g2 * jnp.asarray(k, out_dtype)

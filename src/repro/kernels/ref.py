@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each oracle states the *integer* semantics of its kernel: unpack whatever is
+packed, do the matmul in plain jnp, return int32.  Kernels must match these
+bit-exactly (integer math); tests sweep shapes and dtypes against them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+__all__ = ["binary_qmm_ref", "popcount_qmm_ref", "bitserial_qmm_ref"]
+
+
+def binary_qmm_ref(a: jax.Array, w_packed: jax.Array, k: int) -> jax.Array:
+    """Oracle for ``binary_qmm``: ``a (M, K) int8  @  unpack(w_packed) (K, N)``.
+
+    ``w_packed`` is uint32 ``(ceil(K/32), N)``, 1-bit mantissas packed along
+    the reduction dim; mantissa values are {0, 1}.
+    """
+    w = packing.unpack_bits(w_packed, 1, k, axis=0, dtype=jnp.int32)
+    return jnp.dot(a.astype(jnp.int32), w, preferred_element_type=jnp.int32)
+
+
+def popcount_qmm_ref(a_packed: jax.Array, b_packed: jax.Array, k: int) -> jax.Array:
+    """Oracle for ``popcount_qmm``: binary x binary over packed operands.
+
+    ``out[m, n] = sum_j a[m, j] * b[j, n]`` with a, b in {0,1};
+    a_packed ``(M, Kw)`` packed along axis -1, b_packed ``(Kw, N)`` along 0.
+    """
+    a = packing.unpack_bits(a_packed, 1, k, axis=-1, dtype=jnp.int32)
+    b = packing.unpack_bits(b_packed, 1, k, axis=0, dtype=jnp.int32)
+    return jnp.dot(a, b, preferred_element_type=jnp.int32)
+
+
+def bitserial_qmm_ref(
+    a_planes: jax.Array, b_planes: jax.Array, k: int
+) -> jax.Array:
+    """Oracle for ``bitserial_qmm`` (multi-bit act x act, paper Fig. 4).
+
+    ``a_planes``: uint32 ``(a_bits, M, Kw)`` — bit-planes of the left
+    mantissa, each 1-bit packed along the last axis.
+    ``b_planes``: uint32 ``(b_bits, Kw, N)`` — bit-planes of the right
+    mantissa, packed along axis -2.
+
+    Result: ``sum_ij 2^(i+j) * (A_i @ B_j)`` == ``A @ B`` for the original
+    multi-bit mantissas.
+    """
+    a_bits = a_planes.shape[0]
+    b_bits = b_planes.shape[0]
+    out = None
+    for i in range(a_bits):
+        ai = packing.unpack_bits(a_planes[i], 1, k, axis=-1, dtype=jnp.int32)
+        for j in range(b_bits):
+            bj = packing.unpack_bits(b_planes[j], 1, k, axis=-2, dtype=jnp.int32)
+            part = jnp.dot(ai, bj, preferred_element_type=jnp.int32) << (i + j)
+            out = part if out is None else out + part
+    return out

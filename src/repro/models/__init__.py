@@ -1,0 +1,5 @@
+"""Model zoo: quant-aware transformer/SSM stacks for all assigned archs."""
+
+from repro.models import attention, layers, model_zoo, moe, ssm, transformer
+
+__all__ = ["attention", "layers", "model_zoo", "moe", "ssm", "transformer"]

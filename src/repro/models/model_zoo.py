@@ -1,0 +1,327 @@
+"""Public model API: build any assigned architecture from its ArchConfig.
+
+Entry points (all pure functions of explicit params — pjit-ready):
+
+* ``init_params(key, cfg)``            — training params (latent fp32)
+* ``prepare_serving_params(params)``   — offline: binarize, bit-pack, colsums
+* ``loss_fn(params, batch, cfg, mode)``— LM loss (+ MoE aux, + MTP)
+* ``forward_logits(...)``              — full-sequence logits
+* ``init_cache(batch, max_len, cfg)``  — serving caches (quantized KV)
+* ``prefill(...)`` / ``decode_step(...)``
+
+Frontends per the assignment: ``[audio]``/``[vlm]`` entries stub the
+modality encoder — ``input_specs`` (launch/dryrun.py) provides precomputed
+frame/patch embeddings; the transformer backbone is the real deliverable.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import transformer as T
+
+__all__ = [
+    "init_params",
+    "prepare_serving_params",
+    "loss_fn",
+    "forward_logits",
+    "init_cache",
+    "prefill",
+    "decode_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: dict = {
+        "embedding": jax.random.normal(ks[0], (cfg.vocab_size, d), jnp.float32)
+        * 0.02,
+        "final_norm": jnp.zeros((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["unembedding"] = (
+            jax.random.normal(ks[1], (cfg.vocab_size, d), jnp.float32) * 0.02
+        )
+    cross = cfg.encoder is not None and cfg.encoder.n_layers > 0
+    p["stack"] = T.init_stack(ks[2], cfg, cross=cross)
+
+    if cfg.encoder is not None:
+        enc: dict = {}
+        d_in = cfg.encoder.d_input or d
+        enc["stub_proj"] = L.init_linear(ks[3], d_in, d)
+        if cfg.encoder.n_layers:
+            # a small bidirectional transformer on top of the stub (whisper)
+            enc_cfg = _encoder_cfg(cfg)
+            enc["stack"] = T.init_stack(ks[4], enc_cfg)
+            enc["final_norm"] = jnp.zeros((d,), jnp.float32)
+        p["encoder"] = enc
+
+    if cfg.pos_embedding == "learned":
+        p["pos_embedding"] = (
+            jax.random.normal(ks[5], (cfg.max_seq, d), jnp.float32) * 0.02
+        )
+
+    if cfg.mtp_depth:
+        p["mtp"] = {"proj": L.init_linear(ks[6], 2 * d, d)}
+    return p
+
+
+def _encoder_cfg(cfg: ArchConfig) -> ArchConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-encoder",
+        n_layers=cfg.encoder.n_layers,
+        prefix_layers=(),
+        pattern_period=("g",),
+        causal=False,
+        pos_embedding="sinusoidal",
+        encoder=None,
+        mtp_depth=0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# serving weight pipeline (offline, like the paper's folded coefficients)
+# ---------------------------------------------------------------------------
+
+_FP_LEAF_PATHS = ("router", "stub_proj")  # accuracy-critical, kept FP
+
+
+def prepare_serving_params(params: dict, cfg: ArchConfig):
+    """Binarize + bit-pack every QMM weight; keep FP leaves (norms, router,
+    embeddings, frontend stubs, recurrence gains) as bf16/fp32.
+
+    Inside the scanned ``period`` subtree every weight carries an extra
+    leading scan dim — packing is vmapped over it, so serving params keep
+    the exact pytree structure ``stack_apply`` consumes.
+    """
+
+    def pack_leaf(node, stacked: bool):
+        w = node["w"]
+        base_ndim = w.ndim - (1 if stacked else 0)
+        if base_ndim == 2:
+            fn = lambda n: L.pack_linear_for_serving(n, cfg.quant)
+        elif base_ndim == 3:
+            fn = lambda n: M.pack_experts_for_serving(n, cfg.quant)
+        else:
+            raise ValueError(f"unexpected weight rank {w.ndim} (stacked={stacked})")
+        return jax.vmap(fn)(node) if stacked else fn(node)
+
+    def walk(node, path, stacked):
+        if isinstance(node, dict):
+            if "w" in node and len(node) == 1:
+                if any(s in path for s in _FP_LEAF_PATHS):
+                    return {"w": node["w"].astype(jnp.float32)}
+                return pack_leaf(node, stacked)
+            return {k: walk(v, path + (k,), stacked or k == "period") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, path + (str(i),), stacked) for i, v in enumerate(node))
+        if hasattr(node, "dtype") and jnp.issubdtype(node.dtype, jnp.floating):
+            if path and path[-1] in ("embedding", "unembedding", "pos_embedding"):
+                return node.astype(jnp.bfloat16)
+            return node
+        return node
+
+    return walk(params, (), False)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / (half - 1)))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _embed_inputs(params, tokens, cfg: ArchConfig, positions, frontend=None, mode="train"):
+    x = L.embed(params, tokens, cfg.d_model)
+    if cfg.pos_embedding == "learned":
+        pe = jnp.take(params["pos_embedding"], positions, axis=0)
+        x = x + pe.astype(x.dtype)
+    if (
+        cfg.encoder is not None
+        and cfg.encoder.kind == "patch_stub"
+        and frontend is not None
+    ):
+        # VLM: splice projected patch embeddings over the first positions.
+        patches = L.qlinear(
+            params["encoder"]["stub_proj"], frontend.astype(x.dtype), cfg.quant, "float"
+        )
+        n = patches.shape[1]
+        x = jnp.concatenate([patches.astype(x.dtype), x[:, n:]], axis=1)
+    return x
+
+
+def _run_encoder(params, frontend, cfg: ArchConfig, mode: str):
+    """Whisper-style encoder over stub frame embeddings. Returns (B, T, D)."""
+    enc = params["encoder"]
+    x = L.qlinear(enc["stub_proj"], frontend, cfg.quant, "float")
+    t = x.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(t), x.shape[:2])
+    x = x + _sinusoidal(pos, cfg.d_model).astype(x.dtype)
+    enc_cfg = _encoder_cfg(cfg)
+    x, _, _ = T.stack_apply(enc["stack"], x, enc_cfg, mode, pos)
+    return L.rmsnorm(enc["final_norm"], x, cfg.norm_eps)
+
+
+def _forward_hidden(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ArchConfig,
+    mode: str = "train",
+    frontend: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward to the final (normed) hidden states."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    encoder_out = None
+    if cfg.encoder is not None and cfg.encoder.n_layers and frontend is not None:
+        encoder_out = _run_encoder(params, frontend, cfg, mode)
+    x = _embed_inputs(params, tokens, cfg, positions, frontend, mode)
+    x = x.astype(jnp.bfloat16)
+    x, _, aux = T.stack_apply(
+        params["stack"], x, cfg, mode, positions, None, encoder_out
+    )
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def forward_logits(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ArchConfig,
+    mode: str = "train",
+    frontend: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits (B,S,V), aux_loss)."""
+    x, aux = _forward_hidden(params, tokens, cfg, mode, frontend)
+    logits = L.unembed(params, x, cfg.tie_embeddings)
+    return logits, aux
+
+
+def loss_fn(
+    params: dict,
+    batch: dict,
+    cfg: ArchConfig,
+    mode: str = "train",
+    aux_weight: float = 0.01,
+):
+    """Next-token LM loss (+ MoE balance aux + MTP head for deepseek-v3).
+
+    batch: {"tokens": (B,S) int32, optional "frontend": stub embeddings}.
+    Encoder-only archs (BERT family) use the denoising-copy objective —
+    systems-equivalent supervision (DESIGN.md).
+    """
+    tokens = batch["tokens"]
+    hidden, aux = _forward_hidden(params, tokens, cfg, mode, batch.get("frontend"))
+    ldt = jnp.bfloat16 if cfg.logits_dtype == "bf16" else jnp.float32
+    logits = L.unembed(params, hidden, cfg.tie_embeddings, ldt)
+    if cfg.causal:
+        pred, tgt = logits[:, :-1], tokens[:, 1:]
+    else:
+        pred, tgt = logits, tokens
+    logp = jax.nn.log_softmax(pred, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll.astype(jnp.float32))
+
+    if cfg.mtp_depth and "mtp" in params and cfg.causal:
+        # depth-1 MTP (deepseek-v3): predict t+2 from [h_t ; emb(t+1)],
+        # sharing the unembedding (training-loss only; serving ignores it).
+        h_t = hidden[:, :-2].astype(jnp.float32)
+        emb_next = L.embed(params, tokens[:, 1:-1], cfg.d_model).astype(jnp.float32)
+        mtp_in = jnp.concatenate([h_t, emb_next], axis=-1)
+        h_mtp = L.qlinear(params["mtp"]["proj"], mtp_in, cfg.quant, mode)
+        mtp_logits = L.unembed(params, h_mtp, cfg.tie_embeddings)
+        mlogp = jax.nn.log_softmax(mtp_logits.astype(jnp.float32), axis=-1)
+        mtp_nll = -jnp.take_along_axis(
+            mlogp, tokens[:, 2:][..., None], axis=-1
+        )[..., 0]
+        loss = loss + 0.3 * jnp.mean(mtp_nll)
+
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux, "nll": loss}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(batch: int, max_len: int, cfg: ArchConfig) -> dict:
+    cache = {"stack": T.init_stack_cache(batch, max_len, cfg)}
+    if cfg.encoder is not None and cfg.encoder.n_layers:
+        cache["encoder_out"] = jnp.zeros(
+            (batch, cfg.encoder.n_positions, cfg.d_model), jnp.bfloat16
+        )
+    return cache
+
+
+def prefill(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ArchConfig,
+    cache: dict,
+    frontend: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict]:
+    """Process the prompt; returns (last-position logits (B,V), cache)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    encoder_out = None
+    if cfg.encoder is not None and cfg.encoder.n_layers and frontend is not None:
+        encoder_out = _run_encoder(params, frontend, cfg, "serve")
+        cache = dict(cache, encoder_out=encoder_out.astype(jnp.bfloat16))
+    x = _embed_inputs(params, tokens, cfg, positions, frontend, "serve")
+    x = x.astype(jnp.bfloat16)
+    x, new_stack, _ = T.stack_apply(
+        params["stack"], x, cfg, "serve", positions, cache["stack"], encoder_out
+    )
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = L.unembed(params, x, cfg.tie_embeddings)[:, 0]
+    return logits, dict(cache, stack=new_stack)
+
+
+def decode_step(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ArchConfig,
+    cache: dict,
+) -> Tuple[jax.Array, dict]:
+    """One decode step. tokens (B,) int32 -> logits (B, V) + updated cache."""
+    b = tokens.shape[0]
+    pos_scalar = _cache_pos(cache["stack"], cfg)
+    positions = jnp.broadcast_to(pos_scalar[None, None], (b, 1))
+    x = L.embed(params, tokens[:, None], cfg.d_model)
+    if cfg.pos_embedding == "learned":
+        pe = jnp.take(params["pos_embedding"], positions, axis=0)
+        x = x + pe.astype(x.dtype)
+    x = x.astype(jnp.bfloat16)
+    encoder_out = cache.get("encoder_out")
+    x, new_stack, _ = T.stack_apply(
+        params["stack"], x, cfg, "serve", positions, cache["stack"], encoder_out
+    )
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params, x, cfg.tie_embeddings)[:, 0]
+    return logits, dict(cache, stack=new_stack)
+
+
+def _cache_pos(stack_cache: dict, cfg: ArchConfig):
+    if stack_cache["prefix"]:
+        return stack_cache["prefix"][0]["pos"]
+    return stack_cache["period"][0]["pos"][0]

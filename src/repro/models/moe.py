@@ -1,0 +1,178 @@
+"""Mixture-of-Experts FFN (deepseek-style: shared + routed top-k) — quant-aware.
+
+Dispatch is capacity-based scatter/gather (GShard lineage): tokens are
+sorted by expert, positioned within each expert's capacity buffer, and the
+expert MMs run as one stacked batched matmul ``(E, C, D) x (E, D, F)`` —
+the form that shards cleanly under pjit (experts over the ``model``/EP axis,
+capacity over ``data``) and that the MoE-EP hillclimb re-schedules with
+shard_map all-to-alls (EXPERIMENTS.md §Perf).
+
+BETA integration: routed AND shared experts are binary-weight QMMs; the
+router stays full-precision (tiny and accuracy-critical — the same rationale
+as the paper's FP softmax).  Capacity overflow drops tokens (standard
+GShard semantics; capacity_factor sizes the buffer).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, QuantConfig
+from repro.core import flow_abstraction as FA
+from repro.core import quantization as Q
+from repro.models import layers as L
+
+__all__ = ["init_moe", "moe_ffn", "expert_qlinear", "pack_experts_for_serving"]
+
+
+# ---------------------------------------------------------------------------
+# stacked expert linear (E, K, N)
+# ---------------------------------------------------------------------------
+
+
+def init_experts(key, n_experts: int, d_in: int, d_out: int, scale: float = 1.0):
+    std = scale / (d_in**0.5)
+    return {"w": jax.random.normal(key, (n_experts, d_in, d_out), jnp.float32) * std}
+
+
+def pack_experts_for_serving(p: dict, quant: QuantConfig) -> dict:
+    if not quant.enabled:
+        return {"w": p["w"].astype(jnp.bfloat16)}
+    wq = Q.binarize_weight(p["w"])  # scale per (E, 1, N)
+    colsum = FA.weight_corrections(wq)  # (E, N)
+    packed = wq.pack(axis=1)
+    return {
+        "w_packed": packed.mantissa,  # uint32 (E, K/32, N)
+        "w_scale": packed.scale.astype(jnp.float32),
+        "w_offset": packed.offset.astype(jnp.float32),
+        "w_colsum": colsum.astype(jnp.int32),
+    }
+
+
+def expert_qlinear(p: dict, x: jax.Array, quant: QuantConfig, mode: str, k: int):
+    """``x (E, C, K) @ W (E, K, N)`` per expert, in the execution mode."""
+    if mode == "float" or not quant.enabled:
+        return jnp.einsum("eck,ekn->ecn", x, p["w"].astype(x.dtype))
+    if mode == "train":
+        if quant.prebinarize_gather:
+            w_hat = p["w"]  # pre-binarized via the packed-gather STE
+        else:
+            w_hat = Q.fake_binarize_weight(p["w"])  # (E,K,N), scales (E,1,N)
+        x_hat = Q.fake_quant(x, quant.act_bits)
+        return jnp.einsum("eck,ekn->ecn", x_hat, w_hat.astype(x.dtype))
+    # serve: integer batched MM through the flow abstraction
+    wq = Q.QuantTensor(
+        mantissa=p["w_packed"],
+        scale=p["w_scale"],
+        offset=p["w_offset"],
+        bits=quant.weight_bits,
+        packed=True,
+        packed_axis=1,
+        length=k,
+    )
+    xq = Q.quantize_activation(x.astype(jnp.float32), quant.act_bits)
+    out = FA.qmm_flow(xq, wq, w_colsum=p["w_colsum"])  # colsum (E, N)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# the MoE block
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ArchConfig) -> dict:
+    e = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p = {
+        "router": {"w": jax.random.normal(ks[0], (d, e.n_routed), jnp.float32) * 0.02},
+        "up": init_experts(ks[1], e.n_routed, d, e.d_expert_ff),
+        "gate": init_experts(ks[2], e.n_routed, d, e.d_expert_ff),
+        "down": init_experts(ks[3], e.n_routed, e.d_expert_ff, d, scale=0.5),
+    }
+    if e.n_shared:
+        p["shared"] = L.init_ffn(ks[4], cfg.ffn_type, d, e.shared_ff)
+    return p
+
+
+def _route(logits: jax.Array, e, top_k: int):
+    """Router scores -> (weights (T, k), experts (T, k)). fp32 throughout."""
+    if e.router_scoring == "sigmoid":  # deepseek-v3
+        scores = jax.nn.sigmoid(logits)
+        w, idx = jax.lax.top_k(scores, top_k)
+        w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-20) * e.route_scale
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(scores, top_k)
+    return w, idx
+
+
+def moe_ffn(
+    p: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    mode: str,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux_load_balance_loss scalar)."""
+    e = cfg.moe
+    quant = cfg.quant
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+
+    # --- router (full precision) ---
+    logits = jnp.einsum(
+        "td,de->te", xf.astype(jnp.float32), p["router"]["w"].astype(jnp.float32)
+    )
+    weights, experts = _route(logits, e, e.top_k)  # (T, k)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    probs_mean = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)  # (E,)
+    counts = jnp.zeros((e.n_routed,), jnp.float32).at[experts.reshape(-1)].add(1.0)
+    frac = counts / jnp.float32(t * e.top_k)
+    aux = jnp.float32(e.n_routed) * jnp.sum(frac * probs_mean)
+
+    # --- capacity-based dispatch ---
+    tk = t * e.top_k
+    capacity = int(max(1, round(e.capacity_factor * tk / e.n_routed)))
+    flat_expert = experts.reshape(tk)
+    flat_weight = weights.reshape(tk).astype(jnp.float32)
+    flat_token = jnp.repeat(jnp.arange(t), e.top_k)
+
+    order = jnp.argsort(flat_expert)
+    se = flat_expert[order]
+    st = flat_token[order]
+    sw = flat_weight[order].astype(x.dtype)  # combine weights ride in bf16
+    first = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(tk) - first  # position within expert group
+    keep = pos < capacity
+    dest = jnp.where(keep, se * capacity + pos, e.n_routed * capacity)  # drop slot
+
+    # gather tokens into (E*C [+1 drop], D)
+    buf = jnp.zeros((e.n_routed * capacity + 1, d), x.dtype)
+    buf = buf.at[dest].set(xf[st].astype(x.dtype))
+    h_in = buf[: e.n_routed * capacity].reshape(e.n_routed, capacity, d)
+
+    # --- stacked expert FFN (binary QMMs) ---
+    up = expert_qlinear(p["up"], h_in, quant, mode, d)
+    gate = expert_qlinear(p["gate"], h_in, quant, mode, d)
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    out_e = expert_qlinear(p["down"], h, quant, mode, e.d_expert_ff)
+
+    # --- combine ---
+    out_flat = out_e.reshape(e.n_routed * capacity, d)
+    out_flat = jnp.concatenate([out_flat, jnp.zeros((1, d), x.dtype)], axis=0)
+    gathered = out_flat[dest] * sw[:, None]  # dropped -> slot E*C
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    combined = jnp.zeros((t, d), x.dtype).at[st].add(gathered)
+
+    # --- shared experts (dense FFN, also binary) ---
+    if "shared" in p:
+        combined = combined + L.ffn(
+            p["shared"], xf, cfg.ffn_type, quant, mode
+        )
+
+    return combined.reshape(b, s, d), aux

@@ -1,0 +1,323 @@
+"""Recurrent mixers: Mamba-2 SSD and RG-LRU (recurrentgemma) — quant-aware.
+
+BETA applicability (DESIGN.md §5): the in/out/gate *projections* are
+act x weight QMMs like any dense layer.  The recurrences themselves are
+elementwise/linear-scan state updates — not QMMs — and stay full precision,
+exactly as the paper keeps its non-QMM ops FP.  The chunked SSD form's
+intra-chunk matmuls are act x act shaped; in serve mode they run fake-
+quantized (beyond-paper extension, flagged in DESIGN.md) — the integer
+engine applies but per-chunk affine bookkeeping dominates at these tiny
+chunk sizes, so the win is recorded in §Perf napkin math, not claimed.
+
+Both mixers expose (full-sequence, single-step) forms: training/prefill use
+scan-free chunked math (SSD) or associative scan (RG-LRU); decode carries an
+O(1) recurrent state — this is what makes mamba2/recurrentgemma the
+long_500k-eligible architectures.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+__all__ = [
+    "init_ssd",
+    "ssd_mixer",
+    "init_ssd_state",
+    "init_rglru",
+    "rglru_mixer",
+    "init_rglru_state",
+]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+
+def init_ssd(key, cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gz = s.n_groups * s.d_state
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input projection: [x (di), z-gate (di), B (gz), C (gz), dt (nh)]
+        "in_proj": L.init_linear(ks[0], d, 2 * di + 2 * gz + nh),
+        "out_proj": L.init_linear(ks[1], di, d, scale=0.5),
+        "conv_w": jax.random.normal(ks[2], (s.d_conv, di + 2 * gz), jnp.float32) * 0.2,
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_g": jnp.zeros((di,), jnp.float32),  # gated RMSNorm pre out_proj
+    }
+
+
+def init_ssd_state(batch: int, cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    nh = s.n_heads(cfg.d_model)
+    di = s.d_inner(cfg.d_model)
+    gz = s.n_groups * s.d_state
+    return {
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, di + 2 * gz), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """(..., T) -> (..., T, T) lower-triangular segment sums:
+    out[i, j] = sum_{j < k <= i} a[k]  (0 on the diagonal, -inf above)."""
+    t = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    return jnp.where(i >= j, diff, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, a_coef, b_mat, c_mat, chunk: int, init_state=None):
+    """Chunked SSD (mamba2 'ssd_minimal' algorithm, matmul-rich form).
+
+    Args:
+      x: (B, S, H, P) inputs.
+      dt: (B, S, H) positive step sizes.
+      a_coef: (H,) negative decay coefficients.
+      b_mat, c_mat: (B, S, G, N) input/output projections (G groups).
+      chunk: chunk length Q (S % Q == 0; callers pad).
+      init_state: optional (B, H, P, N) carried state.
+
+    Returns: (y (B,S,H,P), final_state (B,H,P,N))
+    """
+    b, s, h, p = x.shape
+    g, n = b_mat.shape[-2], b_mat.shape[-1]
+    q = chunk
+    nc = s // q
+    hg = h // g  # heads per group
+
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    bc = b_mat.reshape(b, nc, q, g, n)
+    cc = c_mat.reshape(b, nc, q, g, n)
+
+    # decay within chunk: a_bar (B, H, NC, Q)
+    a_bar = (dtc * a_coef[None, None, None, :]).transpose(0, 3, 1, 2)
+    a_cum = jnp.cumsum(a_bar, axis=-1)
+
+    # intra-chunk (attention-like, the act x act-shaped matmuls):
+    l_mat = jnp.exp(_segsum(a_bar))  # (B,H,NC,Q,Q)
+    cb = jnp.einsum("bclgn,bcsgn->bcgls", cc, bc)  # (B,NC,G,Q,Q)
+    cb = jnp.repeat(cb, hg, axis=2)  # -> (B,NC,H,Q,Q)
+    lh = l_mat.transpose(0, 2, 1, 3, 4)  # (B,NC,H,Q,Q)
+    dt_x = xc * dtc[..., None]  # (B,NC,Q,H,P)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", cb * lh, dt_x)
+
+    # chunk states: (B,NC,H,P,N).  (n_groups == 1: the g index reduces
+    # trivially; grouped B/C with G > 1 would need a head->group gather.)
+    assert g == 1, "chunked SSD implemented for n_groups == 1"
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (B,H,NC,Q)
+    states = jnp.einsum("bcsgn,bhcs,bcshp->bchpn", bc, decay_states, dt_x)
+
+    # inter-chunk recurrence over NC (sequential scan; NC is small)
+    chunk_decay = jnp.exp(a_cum[..., -1])  # (B,H,NC)
+
+    def step(carry, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state BEFORE this chunk
+
+    init = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((b, h, p, n), x.dtype)
+    )
+    final, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,NC,H,P,N)
+
+    # contribution of carried state: (B,NC,Q,H,P)
+    state_decay = jnp.exp(a_cum)  # (B,H,NC,Q)
+    c_h = jnp.repeat(cc, hg, axis=3)  # (B,NC,Q,H,N) group -> heads
+    y_off = jnp.einsum(
+        "bclhn,bchpn,bhcl->bclhp", c_h, prev_states, state_decay
+    )
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def ssd_mixer(
+    p: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    mode: str,
+    state: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Full mamba2 block: in_proj -> conv -> SSD -> gated norm -> out_proj."""
+    s_cfg = cfg.ssm
+    d = cfg.d_model
+    di = s_cfg.d_inner(d)
+    nh = s_cfg.n_heads(d)
+    gz = s_cfg.n_groups * s_cfg.d_state
+    b, s, _ = x.shape
+
+    zxbcdt = L.qlinear(p["in_proj"], x, cfg.quant, mode)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * gz], axis=-1)
+    # xbc: (B, S, di + 2*gz) goes through the short conv
+    if state is not None and s == 1:
+        conv_in = jnp.concatenate([state["conv"], xbc], axis=1)
+        new_conv = conv_in[:, 1:]
+    else:
+        pad = jnp.zeros((b, s_cfg.d_conv - 1, xbc.shape[-1]), xbc.dtype)
+        conv_in = jnp.concatenate([pad, xbc], axis=1)
+        new_conv = conv_in[:, -(s_cfg.d_conv - 1) :]
+    # depthwise causal conv via windowed sum
+    w = p["conv_w"].astype(conv_in.dtype)  # (d_conv, C)
+    conv_out = sum(conv_in[:, i : i + s] * w[i] for i in range(s_cfg.d_conv))
+    xbc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+
+    xs, b_mat, c_mat = jnp.split(xbc, [di, di + gz], axis=-1)
+    xh = xs.reshape(b, s, nh, s_cfg.head_dim)
+    bm = b_mat.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    cm = c_mat.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a_coef = -jnp.exp(p["A_log"])  # (H,)
+
+    if state is not None and s == 1:
+        # O(1) decode step: h' = exp(dt*A) h + dt * B x ; y = C h' + D x
+        st = state["ssm"]
+        dec = jnp.exp(dt[:, 0] * a_coef[None, :])  # (B,H)
+        bm0 = jnp.repeat(bm[:, 0], nh // s_cfg.n_groups, axis=1)  # (B,H,N)
+        cm0 = jnp.repeat(cm[:, 0], nh // s_cfg.n_groups, axis=1)
+        upd = (dt[:, 0, :, None] * xh[:, 0])[..., None] * bm0[:, :, None, :]
+        new_st = st * dec[..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", new_st, cm0)
+        y = y + p["D"][None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(b, 1, di)
+        new_state = {"ssm": new_st, "conv": new_conv, "pos": state["pos"] + 1}
+    else:
+        q = min(s_cfg.chunk, s)
+        pad_len = (-s) % q
+        if pad_len:
+            padf = lambda a: jnp.pad(a, [(0, 0), (0, pad_len)] + [(0, 0)] * (a.ndim - 2))
+            xh, bm, cm = padf(xh), padf(bm), padf(cm)
+            dt = jnp.pad(dt, [(0, 0), (0, pad_len), (0, 0)])
+        init_state = state["ssm"] if state is not None else None
+        y, fin = _ssd_chunked(
+            xh.astype(jnp.float32), dt, a_coef, bm.astype(jnp.float32),
+            cm.astype(jnp.float32), q, init_state,
+        )
+        y = y[:, :s]
+        y = y + p["D"][None, None, :, None] * xh[:, :s].astype(jnp.float32)
+        y = y.reshape(b, s, di)
+        new_state = None
+        if state is not None:
+            new_state = {"ssm": fin, "conv": new_conv, "pos": state["pos"] + s}
+
+    # gated RMSNorm then output projection (both full-precision norm + QMM)
+    y = L.rmsnorm(p["norm_g"], y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), cfg.norm_eps)
+    out = L.qlinear(p["out_proj"], y, cfg.quant, mode)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (recurrentgemma recurrent block)
+# ---------------------------------------------------------------------------
+
+
+def init_rglru(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    di = d  # recurrence width = d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": L.init_linear(ks[0], d, di),
+        "in_gate": L.init_linear(ks[1], d, di),
+        "conv_w": jax.random.normal(ks[2], (4, di), jnp.float32) * 0.2,
+        "gate_a": L.init_linear(ks[3], di, di),  # recurrence gate r_t
+        "gate_i": L.init_linear(ks[4], di, di),  # input gate i_t
+        "lambda_p": jnp.ones((di,), jnp.float32) * 4.0,  # a = sigmoid(lambda)
+        "out": L.init_linear(ks[5], di, d, scale=0.5),
+    }
+
+
+def init_rglru_state(batch: int, cfg: ArchConfig) -> dict:
+    di = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di), jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+_RGLRU_C = 8.0
+
+
+def rglru_mixer(
+    p: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    mode: str,
+    state: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """RG-LRU block (Griffin/recurrentgemma):
+    branches -> conv1d(4) -> gated linear recurrence -> gated output."""
+    b, s, d = x.shape
+    xb = L.qlinear(p["in_x"], x, cfg.quant, mode)
+    gate = L.qlinear(p["in_gate"], x, cfg.quant, mode)
+
+    # causal depthwise conv width 4
+    if state is not None and s == 1:
+        conv_in = jnp.concatenate([state["conv"].astype(xb.dtype), xb], axis=1)
+        new_conv = conv_in[:, 1:].astype(jnp.float32)
+    else:
+        pad = jnp.zeros((b, 3, xb.shape[-1]), xb.dtype)
+        conv_in = jnp.concatenate([pad, xb], axis=1)
+        new_conv = conv_in[:, -3:].astype(jnp.float32)
+    w = p["conv_w"].astype(conv_in.dtype)
+    xb = sum(conv_in[:, i : i + s] * w[i] for i in range(4))
+
+    # gates (full precision — elementwise, not QMMs)
+    r = jax.nn.sigmoid(
+        L.qlinear(p["gate_a"], xb, cfg.quant, mode).astype(jnp.float32)
+    )
+    i_g = jax.nn.sigmoid(
+        L.qlinear(p["gate_i"], xb, cfg.quant, mode).astype(jnp.float32)
+    )
+    log_a_base = -_RGLRU_C * jax.nn.softplus(p["lambda_p"])  # log sigmoid-param
+    log_a = log_a_base[None, None, :] * r  # (B,S,di)
+    a = jnp.exp(log_a)
+    gated_x = xb.astype(jnp.float32) * i_g
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+
+    if state is not None and s == 1:
+        h = a[:, 0] * state["h"] + mult[:, 0] * gated_x[:, 0]
+        y = h[:, None]
+        new_state = {"h": h, "conv": new_conv, "pos": state["pos"] + 1}
+    else:
+        # associative linear recurrence h_t = a_t h_{t-1} + b_t
+        bt = mult * gated_x
+
+        def combine(left, right):
+            a1, b1 = left
+            a2, b2 = right
+            return a1 * a2, a2 * b1 + b2
+
+        a_scan, y = jax.lax.associative_scan(combine, (a, bt), axis=1)
+        if state is not None:
+            h0 = state["h"]
+            y = y + a_scan * h0[:, None, :]
+            new_state = {"h": y[:, -1], "conv": new_conv, "pos": state["pos"] + s}
+        else:
+            new_state = None
+
+    out = y.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    return L.qlinear(p["out"], out, cfg.quant, mode), new_state

@@ -1,0 +1,3 @@
+from repro.optim import adamw, compression
+
+__all__ = ["adamw", "compression"]

@@ -1,0 +1,3 @@
+from repro.runtime import fault_tolerance, serve_loop, sharding, train_loop
+
+__all__ = ["fault_tolerance", "serve_loop", "sharding", "train_loop"]

@@ -1,0 +1,134 @@
+"""Fault tolerance: preemption-safe training runner + elastic rescale.
+
+Failure model at 1000+ nodes (DESIGN.md §4):
+
+* **Node/pod loss & preemption** — the runner installs a SIGTERM/SIGINT
+  handler that requests a checkpoint at the next step boundary and exits
+  cleanly; restart resumes bit-identically (params, opt state, data cursor
+  all inside the checkpoint).  Tested by killing a real training subprocess
+  mid-run (tests/test_fault_tolerance.py).
+* **Elastic rescale** — checkpoints are mesh-agnostic (stored unsharded per
+  host); ``CheckpointManager.restore(shardings=...)`` re-shards onto the new
+  mesh, and ``TokenPipeline.reshard`` re-slices the data stream: a job that
+  lost a pod restarts on the smaller mesh without data repetition.
+* **Stragglers** — inside a pod, TPU SPMD is bulk-synchronous (no per-op
+  stragglers; a slow chip slows the lockstep program, which monitoring
+  catches as step-time regression).  Across pods the options are (a) the
+  default synchronous gradient sync, (b) ``make_compressed_dp_step`` which
+  cuts the sync payload 4x, and (c) checkpoint-evict-resume for persistent
+  stragglers — the runner exposes step-time percentiles so an external
+  orchestrator can trigger (c).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import TokenPipeline
+
+__all__ = ["RunnerConfig", "TrainingRunner"]
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    keep_checkpoints: int = 3
+    log_every: int = 10
+
+
+class TrainingRunner:
+    """Step loop + checkpoint/restore + preemption handling.
+
+    ``train_step``: jitted (params, opt_state, batch) -> (params, opt_state,
+    metrics).  The runner owns nothing about the model — it moves state
+    through steps and persists it.
+    """
+
+    def __init__(
+        self,
+        train_step: Callable,
+        pipeline: TokenPipeline,
+        manager: CheckpointManager,
+        cfg: RunnerConfig,
+        log_fn: Callable[[str], None] = print,
+    ):
+        self.train_step = train_step
+        self.pipeline = pipeline
+        self.manager = manager
+        self.cfg = cfg
+        self.log = log_fn
+        self._preempted = False
+        self.step_times: List[float] = []
+
+    # -- preemption ------------------------------------------------------
+    def install_signal_handlers(self) -> None:
+        def handler(signum, frame):
+            self.log(f"[runner] signal {signum}: checkpoint at next boundary")
+            self._preempted = True
+
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+
+    # -- resume ----------------------------------------------------------
+    def try_restore(self, params, opt_state, shardings=None):
+        step = self.manager.latest_step()
+        if step is None:
+            return 0, params, opt_state
+        step, tree, extras = self.manager.restore(
+            step, like={"params": params, "opt": opt_state}, shardings=shardings
+        )
+        self.pipeline.restore(extras["pipeline"])
+        self.log(f"[runner] resumed from step {step}")
+        return step, tree["params"], tree["opt"]
+
+    def _save(self, step: int, params, opt_state) -> None:
+        extras = {"pipeline": self.pipeline.state(), "step": step}
+        path = self.manager.save(step, {"params": params, "opt": opt_state}, extras)
+        self.log(f"[runner] checkpoint step {step} -> {path}")
+
+    # -- main loop -------------------------------------------------------
+    def run(self, params, opt_state, start_step: int = 0):
+        metrics_hist: List[Dict[str, float]] = []
+        step = start_step
+        while step < self.cfg.total_steps:
+            batch = {
+                k: jax.numpy.asarray(v) for k, v in self.pipeline.next().items()
+            }
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self.train_step(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.step_times.append(dt)
+            step += 1
+            if step % self.cfg.log_every == 0 or step == self.cfg.total_steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step_time_s"] = dt
+                metrics_hist.append({"step": step, **m})
+                self.log(
+                    f"[runner] step {step} loss {m['loss']:.4f} "
+                    f"({dt*1e3:.0f} ms, p50 {self.p50*1e3:.0f} ms)"
+                )
+            if step % self.cfg.checkpoint_every == 0 or self._preempted:
+                self._save(step, params, opt_state)
+                if self._preempted:
+                    self.log("[runner] exiting after preemption checkpoint")
+                    break
+        return params, opt_state, metrics_hist
+
+    @property
+    def p50(self) -> float:
+        return float(np.median(self.step_times)) if self.step_times else 0.0
+
+    @property
+    def p99(self) -> float:
+        return (
+            float(np.percentile(self.step_times, 99)) if self.step_times else 0.0
+        )

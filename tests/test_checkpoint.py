@@ -1,0 +1,73 @@
+"""Checkpoint manager: atomicity, keep-k, elastic restore."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (16, 8)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    tree = _tree()
+    m.save(5, tree, extras={"pipeline": {"cursor": 42, "seed": 0}})
+    step, out, extras = m.restore(like=jax.tree.map(jnp.zeros_like, tree))
+    assert step == 5
+    assert extras["pipeline"]["cursor"] == 42
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_k_prunes_old(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        m.save(s, _tree(s))
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(tmp_path) if n.startswith("step_")
+    )
+    assert steps == [3, 4]
+
+
+def test_latest_ignores_uncommitted(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save(1, _tree())
+    # fake a torn write: directory without _COMMITTED
+    os.makedirs(tmp_path / "step_000000002")
+    assert m.latest_step() == 1
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=1)
+    m.save(1, _tree())
+    bad = {"a": jnp.zeros((4, 4)), "nested": {"b": jnp.zeros(10, jnp.int32)}}
+    with pytest.raises(ValueError):
+        m.restore(like=bad)
+
+
+def test_elastic_restore_onto_different_mesh(tmp_path):
+    """Save unsharded, restore with explicit shardings on a 2-device mesh —
+    the elastic-rescale path (CPU: single device behaves as a 1x1 mesh; the
+    multi-device variant runs in test_fault_tolerance via subprocess)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    m = CheckpointManager(str(tmp_path), keep=1)
+    tree = _tree()
+    m.save(1, tree)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    sh = {
+        "a": NamedSharding(mesh, P(None, None)),
+        "nested": {"b": NamedSharding(mesh, P())},
+    }
+    _, out, _ = m.restore(like=jax.tree.map(jnp.zeros_like, tree), shardings=sh)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))

@@ -1,0 +1,75 @@
+"""Data pipeline invariants: determinism, sharding, checkpoint/resume."""
+
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, TokenPipeline
+
+
+def _cfg(**kw):
+    base = dict(vocab_size=1000, seq_len=32, global_batch=8, seed=7)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_deterministic_across_instances():
+    a = TokenPipeline(_cfg())
+    b = TokenPipeline(_cfg())
+    for _ in range(3):
+        np.testing.assert_array_equal(a.next()["tokens"], b.next()["tokens"])
+
+
+def test_shards_are_disjoint_slices_of_global():
+    full = TokenPipeline(_cfg(), shard_index=0, num_shards=1)
+    s0 = TokenPipeline(_cfg(), shard_index=0, num_shards=2)
+    s1 = TokenPipeline(_cfg(), shard_index=1, num_shards=2)
+    b_full = full.next()["tokens"]
+    b0, b1 = s0.next()["tokens"], s1.next()["tokens"]
+    assert b0.shape == (4, 32) and b1.shape == (4, 32)
+    # shards must differ from each other (disjoint random streams)
+    assert not np.array_equal(b0, b1)
+
+
+def test_resume_from_cursor_is_bit_identical():
+    a = TokenPipeline(_cfg())
+    for _ in range(5):
+        a.next()
+    state = a.state()
+    want = a.next()["tokens"]
+    b = TokenPipeline(_cfg())
+    b.restore(state)
+    np.testing.assert_array_equal(b.next()["tokens"], want)
+
+
+def test_reshard_keeps_cursor():
+    a = TokenPipeline(_cfg(), shard_index=0, num_shards=2)
+    a.next(), a.next()
+    b = a.reshard(0, 4)
+    assert b.cursor == 2
+    assert b.local_batch == 2
+
+
+def test_seed_mismatch_rejected():
+    a = TokenPipeline(_cfg())
+    with pytest.raises(ValueError):
+        b = TokenPipeline(_cfg(seed=8))
+        b.restore(a.state())
+
+
+def test_stream_is_learnable_not_uniform():
+    """The n-gram echo must create predictable structure (loss can drop)."""
+    p = TokenPipeline(_cfg(seq_len=256, global_batch=4))
+    toks = p.next()["tokens"]
+    # echo property: token[t] == (token[t-3] + shift) % V with prob ~0.5,
+    # measured against the FINAL stream (echo chains compound, so the
+    # observable rate is ~p*(p + (1-p)/1) ~ 0.25-0.5); uniform would be ~1/V.
+    echo = (np.roll(toks, 3, axis=1) + p._shift) % 1000
+    match = (toks[:, 3:] == echo[:, 3:]).mean()
+    assert 0.15 < match < 0.7, f"echo rate {match}"
+
+
+def test_frontend_embeddings_emitted():
+    p = TokenPipeline(_cfg(frontend_positions=12, frontend_dim=24))
+    b = p.next()
+    assert b["frontend"].shape == (8, 12, 24)
+    assert b["frontend"].dtype == np.float32

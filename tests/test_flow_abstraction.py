@@ -1,0 +1,140 @@
+"""Property tests: the computation-flow abstraction is EXACT.
+
+The paper's claim (§III-A): reordering ``(aA + g1)(bW + g2)`` into an integer
+MM plus quadratic corrections changes nothing about the result.  We assert
+equality against the dequantize-then-matmul oracle to fp32 rounding, across
+both QMM types, every engine precision mode, and every integer backend.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import flow_abstraction as FA
+from repro.core import qmm as QE
+from repro.core import quantization as Q
+
+
+def _rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+def _tol(ref):
+    return 2e-5 * max(1.0, float(jnp.max(jnp.abs(ref))))
+
+
+@pytest.mark.parametrize("act_bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("backend", ["mxu", "popcount"])
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_act_weight_equals_oracle(act_bits, backend, seed):
+    rng = np.random.default_rng(seed)
+    m, k, n = rng.integers(1, 40), int(rng.integers(1, 130)), int(rng.integers(1, 40))
+    x = _rand(rng, m, k)
+    w = _rand(rng, k, n)
+    xq = Q.quantize_activation(x, act_bits)
+    wq = Q.binarize_weight(w)
+    ref = FA.qmm_dequant_reference(xq, wq)
+    out = QE.qmm(xq, wq, backend=backend)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=_tol(ref))
+
+
+@pytest.mark.parametrize("act_bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("backend", ["mxu", "popcount"])
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=6, deadline=None)
+def test_act_act_equals_oracle(act_bits, backend, seed):
+    """QMM type 2 — the capability prior accelerators lack (paper §II)."""
+    rng = np.random.default_rng(seed)
+    b, m, k, n = 2, int(rng.integers(1, 20)), int(rng.integers(1, 70)), int(rng.integers(1, 20))
+    a = _rand(rng, b, m, k)
+    v = _rand(rng, b, k, n)
+    aq = Q.quantize_activation(a, act_bits)
+    vq = Q.quantize_activation(v, act_bits)
+    ref = FA.qmm_dequant_reference(aq, vq)
+    out = QE.qmm(aq, vq, backend=backend)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=_tol(ref))
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_integer_core_is_exact(seed):
+    """The cubic term is pure integer math — bit-exact across backends."""
+    rng = np.random.default_rng(seed)
+    m, k, n = 8, 96, 8
+    x = rng.integers(0, 2, size=(m, k)).astype(np.int32)
+    w = rng.integers(0, 2, size=(k, n)).astype(np.int32)
+    ref = x @ w
+    mxu = FA.default_int_matmul(jnp.asarray(x), jnp.asarray(w), 1, 1)
+    pop = QE.popcount_int_matmul(jnp.asarray(x), jnp.asarray(w), 1, 1)
+    np.testing.assert_array_equal(np.asarray(mxu), ref)
+    np.testing.assert_array_equal(np.asarray(pop), ref)
+
+
+@pytest.mark.parametrize("bits", [(1, 1), (4, 1), (8, 8), (4, 4), (2, 8)])
+def test_bitserial_popcount_exact(bits):
+    xb, yb = bits
+    rng = np.random.default_rng(42)
+    x = rng.integers(0, 2**xb, size=(7, 65)).astype(np.int32)
+    y = rng.integers(0, 2**yb, size=(65, 9)).astype(np.int32)
+    out = QE.popcount_int_matmul(jnp.asarray(x), jnp.asarray(y), xb, yb)
+    np.testing.assert_array_equal(np.asarray(out), x @ y)
+
+
+def test_recenter_is_exact():
+    rng = np.random.default_rng(1)
+    for bits in (2, 4, 8):
+        x = _rand(rng, 6, 33)
+        q = Q.quantize_activation(x, bits)
+        rq = Q.recenter(q)
+        assert rq.mantissa.dtype == jnp.int8
+        np.testing.assert_allclose(
+            np.asarray(rq.dequantize()), np.asarray(q.dequantize()), rtol=1e-6, atol=1e-6
+        )
+
+
+def test_weight_colsum_precompute_matches_inline():
+    rng = np.random.default_rng(2)
+    x = _rand(rng, 5, 64)
+    w = _rand(rng, 64, 10)
+    xq = Q.quantize_activation(x, 4)
+    wq = Q.binarize_weight(w)
+    a = QE.qmm(xq, wq, backend="mxu")
+    b = QE.qmm(xq, wq, backend="mxu", w_colsum=FA.weight_corrections(wq))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+def test_packed_operands_accepted():
+    """Serving path: weights arrive bit-packed from the checkpoint."""
+    rng = np.random.default_rng(3)
+    x = _rand(rng, 5, 64)
+    w = _rand(rng, 64, 10)
+    xq = Q.quantize_activation(x, 1)
+    wq = Q.binarize_weight(w).pack(axis=0)
+    assert wq.packed and wq.mantissa.dtype == jnp.uint32
+    assert wq.logical_shape == (64, 10)
+    ref = QE.qmm(xq, Q.binarize_weight(w), backend="mxu")
+    out = QE.qmm(xq, wq, backend="mxu")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-6)
+
+
+def test_op_count_accounting_matches_fig2():
+    """Fig. 2: N^3 Op -> 2N^3 Iop + (3N^2+2) Op for square act x weight."""
+    n = 64
+    naive = FA.op_counts_naive(n, n, n)
+    assert naive == {"fp_ops": 2 * n**3, "int_ops": 0}
+    abst = FA.op_counts_abstracted(n, n, n, weight_static=True)
+    assert abst["fp_ops"] == 3 * n**2 + 2
+    assert abst["int_ops"] == 2 * n**3 + n * n  # integer MM + rowsum
+
+
+def test_chunked_accumulation_large_k():
+    """8-bit x 8-bit with K big enough to trigger chunking stays correct."""
+    rng = np.random.default_rng(4)
+    k = 40000  # 2^14 * 128*128 > 2^30 -> chunked
+    x = rng.integers(-128, 128, size=(2, k)).astype(np.int32)
+    y = rng.integers(-128, 128, size=(k, 3)).astype(np.int32)
+    out = FA.default_int_matmul(jnp.asarray(x), jnp.asarray(y), 8, 8)
+    ref = (x.astype(np.int64) @ y.astype(np.int64)).astype(np.float64)
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float64), ref, rtol=1e-6)

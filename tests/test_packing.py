@@ -1,0 +1,75 @@
+"""Packing/unpacking invariants (property-based)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing as P
+
+
+@st.composite
+def _arrays(draw, bits):
+    rows = draw(st.integers(1, 7))
+    length = draw(st.integers(1, 200))
+    seed = draw(st.integers(0, 2**32 - 1))
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 2**bits, size=(rows, length)).astype(np.int32)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_pack_roundtrip(bits, data):
+    x = data.draw(_arrays(bits))
+    for axis in (0, 1, -1):
+        packed = P.pack_bits(jnp.asarray(x), bits, axis=axis)
+        assert packed.dtype == jnp.uint32
+        assert packed.shape[axis] == P.packed_len(x.shape[axis], bits)
+        out = P.unpack_bits(packed, bits, x.shape[axis], axis=axis)
+        np.testing.assert_array_equal(np.asarray(out), x)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_bitplane_roundtrip(bits, data):
+    x = data.draw(_arrays(bits))
+    planes = P.to_bitplanes(jnp.asarray(x), bits)
+    assert planes.shape == (bits,) + x.shape
+    assert set(np.unique(np.asarray(planes))) <= {0, 1}
+    back = P.from_bitplanes(planes, bits)
+    np.testing.assert_array_equal(np.asarray(back), x.astype(np.uint32))
+
+
+@given(data=st.data())
+@settings(max_examples=20, deadline=None)
+def test_bitplane_weighted_sum_identity(data):
+    """x == sum_i 2^i plane_i — the bit-serial schedule's correctness basis."""
+    bits = data.draw(st.sampled_from([2, 4, 8]))
+    x = data.draw(_arrays(bits))
+    planes = np.asarray(P.to_bitplanes(jnp.asarray(x), bits))
+    recon = sum((planes[i].astype(np.int64) << i) for i in range(bits))
+    np.testing.assert_array_equal(recon, x)
+
+
+def test_np_twin_matches_jax():
+    rng = np.random.default_rng(0)
+    for bits in (1, 2, 4, 8):
+        x = rng.integers(0, 2**bits, size=(9, 100)).astype(np.int32)
+        a = np.asarray(P.pack_bits(jnp.asarray(x), bits, axis=-1))
+        b = P.pack_bits_np(x, bits, axis=-1)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_packed_len_tail_padding_is_zero():
+    x = jnp.ones((1, 33), jnp.int32)
+    packed = P.pack_bits(x, 1, axis=-1)
+    assert packed.shape == (1, 2)
+    # 33rd bit set, rest of word 2 must be zero-padded
+    assert int(packed[0, 1]) == 1
+
+
+def test_values_per_word_rejects_bad_bits():
+    with pytest.raises(ValueError):
+        P.values_per_word(3)

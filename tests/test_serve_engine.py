@@ -1,0 +1,109 @@
+"""Serving engine + dry-run helper units (fast, no big compiles)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES_BY_NAME
+from repro.configs.smoke import smoke_variant
+from repro.models import model_zoo as Z
+from repro.runtime.serve_loop import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = smoke_variant(get_config("granite-8b"))
+    params = Z.init_params(jax.random.PRNGKey(0), cfg)
+    serving = Z.prepare_serving_params(params, cfg)
+    return cfg, ServeEngine(cfg, serving, batch_slots=2, max_len=48, seed=0)
+
+
+def test_engine_serves_a_queue(engine):
+    cfg, eng = engine
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab_size, size=(5 + i,)).astype(np.int32),
+                max_new_tokens=6)
+        for i in range(5)  # 5 requests through 2 slots -> 3 waves
+    ]
+    done = eng.run(reqs)
+    assert len(done) == 5
+    assert all(len(r.output) == 6 for r in done)
+    assert all(0 <= t < cfg.vocab_size for r in done for t in r.output)
+
+
+def test_greedy_is_deterministic(engine):
+    cfg, eng = engine
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab_size
+    a = eng.run([Request(prompt=prompt, max_new_tokens=5)])[0].output
+    b = eng.run([Request(prompt=prompt, max_new_tokens=5)])[0].output
+    assert a == b
+
+
+def test_temperature_sampling_varies(engine):
+    cfg, eng = engine
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab_size
+    outs = {
+        tuple(eng.run([Request(prompt=prompt, max_new_tokens=8, temperature=1.5)])[0].output)
+        for _ in range(3)
+    }
+    assert len(outs) > 1  # overwhelmingly likely with T=1.5
+
+
+# ---------------------------------------------------------------------------
+# dry-run helper units
+# ---------------------------------------------------------------------------
+
+
+def test_collective_byte_parser():
+    from repro.launch.dryrun import collective_bytes
+
+    hlo = """
+      %ag = f32[128,256]{1,0} all-gather(%x), replica_groups={}
+      %ar.1 = bf16[64]{0} all-reduce(%y), to_apply=%sum
+      %nothing = f32[2,2]{1,0} add(%a, %b)
+      %aa = (s8[16,16]{1,0}, s8[16,16]{1,0}) all-to-all(%p, %q)
+    """
+    out = collective_bytes(hlo)
+    assert out["all-gather"]["bytes"] == 128 * 256 * 4
+    assert out["all-gather"]["count"] == 1
+    assert out["all-reduce"]["bytes"] == 64 * 2
+    assert out["all-to-all"]["bytes"] == 2 * 16 * 16
+    assert out["total_bytes"] == 128 * 256 * 4 + 128 + 512
+
+
+def test_skip_rules_match_design_doc():
+    from repro.launch.dryrun import skip_reason
+
+    long = SHAPES_BY_NAME["long_500k"]
+    assert skip_reason(get_config("mistral-nemo-12b"), long)  # full attention
+    assert skip_reason(get_config("gemma3-27b"), long)  # has global layers
+    assert skip_reason(get_config("mamba2-130m"), long) is None  # SSM runs
+    assert skip_reason(get_config("recurrentgemma-2b"), long) is None  # hybrid runs
+    train = SHAPES_BY_NAME["train_4k"]
+    for arch in ("granite-8b", "deepseek-v3-671b", "whisper-tiny"):
+        assert skip_reason(get_config(arch), train) is None
+
+
+def test_input_specs_cover_frontends():
+    from repro.launch.dryrun import input_specs
+
+    shape = SHAPES_BY_NAME["train_4k"]
+    s1 = input_specs(get_config("granite-8b"), shape)
+    assert set(s1) == {"tokens"} and s1["tokens"].shape == (256, 4096)
+    s2 = input_specs(get_config("whisper-tiny"), shape)
+    assert s2["frontend"].shape == (256, 1500, 384)
+    s3 = input_specs(get_config("internvl2-2b"), shape)
+    assert s3["frontend"].shape == (256, 256, 1024)
+
+
+def test_opt_transforms_apply():
+    from repro.launch.dryrun import apply_opts
+
+    cfg = get_config("granite-8b")
+    out = apply_opts(cfg, ["scores_bf16", "gqa_expand", "packed_gather"])
+    assert out.attn_scores_dtype == "bf16"
+    assert out.gqa_mode == "expand"
+    assert out.quant.prebinarize_gather
