@@ -1,5 +1,9 @@
 """int8 error-feedback gradient compression: payload + fidelity accounting.
 
+Reproduces: no paper table — a systems extension (the BETA storage insight
+applied to the cross-pod gradient fabric; EXPERIMENTS.md §Dist).
+Run:        PYTHONPATH=src python benchmarks/compression_bench.py
+
 The distributed-optimization trick for cross-pod DP (optim.compression):
 measures (a) wire-byte reduction of the compressed all-reduce vs fp32, and
 (b) gradient fidelity (cosine similarity + error-feedback residual decay)

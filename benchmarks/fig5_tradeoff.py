@@ -1,5 +1,8 @@
 """Fig. 5 reproduction: efficiency <-> accuracy trade-off across W1A{1,2,4,8}.
 
+Reproduces: paper Fig. 5 (precision <-> efficiency/accuracy trade-off).
+Run:        PYTHONPATH=src python benchmarks/fig5_tradeoff.py
+
 Hardware side (throughput, GOPS/W): pure predictions of the calibrated
 structural model — the paper's measured trend (throughput and efficiency
 rise as activation precision drops) must come out of the datapath structure

@@ -1,13 +1,22 @@
 """QMM engine micro-benchmarks (measured on this container's CPU).
 
+Reproduces the engine-level evidence behind the paper's §III-C claims
+(Table II / Fig. 5 use the calibrated hardware model; this file measures
+the *software* engine).  Run directly::
+
+    PYTHONPATH=src python benchmarks/qmm_micro.py
+
 Times the three integer backends and the naive dequantized-FP flow the
 paper replaces, over BERT-base QMM shapes.  On CPU the absolute numbers
-reflect this host, but two paper claims are checked *structurally*:
+reflect this host, but three claims are checked *structurally*:
 
 1. the abstracted flow (integer MM + rank-1 epilogue) beats the naive
-   dequantize-then-FP32-matmul flow it replaces, and
+   dequantize-then-FP32-matmul flow it replaces,
 2. both QMM types (act x weight, act x act) run through one engine at
-   every activation precision.
+   every activation precision, and
+3. the autotuned dispatcher (core.dispatch) picks a backend whose measured
+   time matches the best candidate (chosen-vs-best parity rows): parity =
+   t_chosen / t_best, 1.00 meaning the cache picked the true winner.
 """
 
 from __future__ import annotations
@@ -19,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch
 from repro.core import flow_abstraction as FA
 from repro.core import qmm as QE
 from repro.core import quantization as Q
@@ -97,6 +107,47 @@ def run() -> list:
             "derived": f"popcount={t_pop:.0f}us mxu={t_mxu:.0f}us",
         }
     )
+
+    rows.extend(_dispatch_parity_rows(rng))
+    return rows
+
+
+def _dispatch_parity_rows(rng) -> list:
+    """Chosen-vs-best parity of the autotuned dispatcher.
+
+    For a grid of (M, precision) cells, let the autotune cache pick a
+    backend, then independently re-time every candidate; report
+    ``parity = t_chosen / t_best`` (1.00 = the cache picked the true
+    winner; small noise-driven excursions above 1 are expected).
+    """
+    rows = []
+    cache = dispatch.AutotuneCache()
+    k, n = 768, 768  # BERT-base attention-out QMM column
+    for m, act_bits in ((8, 1), (8, 8), (256, 1), (256, 8)):
+        x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+        xq = Q.quantize_activation(x, act_bits)
+        wq = Q.binarize_weight(w)
+        # same conditions the tuner timed under: packed weights, colsum folded
+        colsum = FA.weight_corrections(wq)
+        wq = wq.pack(axis=0)
+        chosen = cache.choose(m, k, n, act_bits, 1)
+        timings = {
+            b: _time(functools.partial(_flow, backend=b), xq, wq, colsum)
+            for b in dispatch.candidate_backends(m, k, n, act_bits, 1)
+        }
+        best = min(timings, key=timings.get)
+        parity = timings[chosen] / timings[best]
+        rows.append(
+            {
+                "name": f"qmm_micro/dispatch/M{m}_W1A{act_bits}",
+                "us_per_call": timings[chosen],
+                "derived": (
+                    f"chosen={chosen} best={best} parity={parity:.2f} "
+                    + " ".join(f"{b}={t:.0f}us" for b, t in sorted(timings.items()))
+                ),
+            }
+        )
     return rows
 
 

@@ -1,5 +1,10 @@
 """Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
 
+Reproduces: no paper table — the TPU-side roofline accounting for the
+serving claims.  Needs dry-run artifacts first:
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+Run:        PYTHONPATH=src python benchmarks/roofline.py
+
 Per (arch x shape x mesh) cell:
 
   compute term    = HLO_FLOPs_per_device / peak_FLOP/s        [s]

@@ -1,5 +1,8 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
+Run:        PYTHONPATH=src python benchmarks/run.py
+Per-module invocations and an index: benchmarks/README.md.
+
 Prints ``name,us_per_call,derived`` CSV:
 
   table1_resources   Table I   FPGA resource breakdown (structural model)
@@ -12,8 +15,13 @@ Prints ``name,us_per_call,derived`` CSV:
 
 from __future__ import annotations
 
+import os
 import sys
 import traceback
+
+# allow `python benchmarks/run.py` from the repo root (sys.path[0] is the
+# benchmarks dir itself in that case, hiding the package)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:

@@ -1,5 +1,8 @@
 """Table I reproduction: FPGA resource breakdown from the datapath structure.
 
+Reproduces: paper Table I (LUT/FF/BRAM/DSP budget on ZCU102).
+Run:        PYTHONPATH=src python benchmarks/table1_resources.py
+
 BETA's LUT/FF/BRAM/DSP budget follows from its structural parameters; the
 model below derives each Table I row from (N, J, precision modes) and
 first-principle per-PE costs, calibrated once on the DPU row:

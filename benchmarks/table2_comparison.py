@@ -1,5 +1,8 @@
 """Table II reproduction: BETA vs FP-32/FIX-16 baselines vs CPU.
 
+Reproduces: paper Table II (throughput / power / GOPS/W comparison).
+Run:        PYTHONPATH=src python benchmarks/table2_comparison.py
+
 Columns reproduced from the calibrated structural model (core.energy_model):
 throughput (GOPS), power (W), energy efficiency (GOPS/W) for the three
 benchmark models (BiT / BinaryBERT / BiBERT, all BERT-base @ W1A1), the two

@@ -2,7 +2,9 @@
 
 Format: one directory per step —
     step_000123/
-      manifest.msgpack.zst   # treedef, shapes, dtypes, shard geometry, extras
+      manifest.msgpack[.zst] # treedef, shapes, dtypes, shard geometry, extras
+                             # (.zst only when the optional zstandard codec
+                             #  is installed; readers accept either)
       arrays.npz             # flattened leaves (this host's shards)
       _COMMITTED             # written last; readers ignore dirs without it
 
@@ -37,9 +39,41 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional codec: absent -> manifests are written uncompressed
+    import zstandard
+except ImportError:  # pragma: no cover - depends on container contents
+    zstandard = None
 
 __all__ = ["CheckpointManager"]
+
+_MANIFEST_ZST = "manifest.msgpack.zst"
+_MANIFEST_RAW = "manifest.msgpack"
+
+
+def _write_manifest(dirname: str, manifest: dict) -> None:
+    payload = msgpack.packb(manifest)
+    if zstandard is not None:
+        with open(os.path.join(dirname, _MANIFEST_ZST), "wb") as f:
+            f.write(zstandard.ZstdCompressor().compress(payload))
+    else:
+        with open(os.path.join(dirname, _MANIFEST_RAW), "wb") as f:
+            f.write(payload)
+
+
+def _read_manifest(dirname: str) -> dict:
+    """Read either codec, whichever the writing host had available."""
+    zst_path = os.path.join(dirname, _MANIFEST_ZST)
+    if os.path.exists(zst_path):
+        if zstandard is None:
+            raise RuntimeError(
+                f"{zst_path} is zstd-compressed but the zstandard module is "
+                "not installed (pip install zstandard)"
+            )
+        with open(zst_path, "rb") as f:
+            return msgpack.unpackb(zstandard.ZstdDecompressor().decompress(f.read()))
+    with open(os.path.join(dirname, _MANIFEST_RAW), "rb") as f:
+        return msgpack.unpackb(f.read())
 
 _STEP_RE = re.compile(r"^step_(\d{9})$")
 
@@ -78,9 +112,7 @@ class CheckpointManager:
                 "time": time.time(),
                 "proc": 0,
             }
-            payload = zstandard.ZstdCompressor().compress(msgpack.packb(manifest))
-            with open(os.path.join(tmp, "manifest.msgpack.zst"), "wb") as f:
-                f.write(payload)
+            _write_manifest(tmp, manifest)
             with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
                 f.write("ok")
             if os.path.exists(final):
@@ -118,8 +150,7 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no committed checkpoints in {self.directory}")
         d = os.path.join(self.directory, f"step_{step:09d}")
-        with open(os.path.join(d, "manifest.msgpack.zst"), "rb") as f:
-            manifest = msgpack.unpackb(zstandard.ZstdDecompressor().decompress(f.read()))
+        manifest = _read_manifest(d)
         data = np.load(os.path.join(d, "arrays.npz"))
         arrays = [data[f"a{i}"] for i in range(len(manifest["leaves"]))]
 

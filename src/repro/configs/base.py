@@ -56,16 +56,50 @@ class QuantConfig:
     attn_act_bits: int = 8
     quantize_attention: bool = True
     kv_cache_bits: int = 8
-    # integer-MM backend: "mxu" | "popcount" | "pallas" (see core.qmm)
+    # integer-MM backend: "auto" | "mxu" | "popcount" | "pallas" (core.qmm).
+    # "auto" routes through the measured autotune cache (core.dispatch).
     backend: str = "mxu"
+    # per-layer backend overrides: ((fnmatch pattern over the layer name,
+    # backend), ...) — first match wins, e.g. (("ffn.down", "popcount"),
+    # ("attn.*", "mxu")).  Unmatched layers use ``backend``.
+    backend_overrides: Tuple[Tuple[str, str], ...] = ()
     # QAT weights are binarized+bit-packed BEFORE the FSDP all-gather, so
     # the wire carries 1-bit words instead of fp32 latents (32x — the
     # BETA storage insight applied to the collective fabric; §Perf).
     prebinarize_gather: bool = False
 
+    #: Valid integer-MM backends ("auto" = measured dispatch, core.dispatch).
+    KNOWN_BACKENDS = ("auto", "mxu", "popcount", "pallas")
+
+    def __post_init__(self):
+        if self.backend not in self.KNOWN_BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; valid: {self.KNOWN_BACKENDS}"
+            )
+        for pattern, b in self.backend_overrides:
+            if b not in self.KNOWN_BACKENDS:
+                raise ValueError(
+                    f"backend_overrides[{pattern!r}] names unknown backend "
+                    f"{b!r}; valid: {self.KNOWN_BACKENDS}"
+                )
+
     @property
     def mode_name(self) -> str:
         return f"W{self.weight_bits}A{self.act_bits}"
+
+    def backend_for(self, layer_name: str = "") -> str:
+        """Resolve the integer-MM backend for a named layer site.
+
+        ``layer_name`` is the dotted site name the model layer passes down
+        (e.g. "ffn.up", "attn.o"); unnamed sites resolve to the default.
+        """
+        if layer_name:
+            import fnmatch
+
+            for pattern, b in self.backend_overrides:
+                if fnmatch.fnmatchcase(layer_name, pattern):
+                    return b
+        return self.backend
 
 
 FLOAT_QUANT = QuantConfig(enabled=False)

@@ -5,9 +5,17 @@
 - ``flow_abstraction``  the computation-flow rewrite (§III-A, Fig. 2)
 - ``precision``         the configurable engine's W1A{1,2,4,8} mode registry
 - ``qmm``               the QMM engine dispatcher (MXU / popcount / Pallas)
+- ``dispatch``          measured backend autotuning behind qmm(backend="auto")
 - ``energy_model``      BETA cycle & energy model (Tables I/II, Fig. 5)
 """
 
-from repro.core import flow_abstraction, packing, precision, qmm, quantization
+from repro.core import dispatch, flow_abstraction, packing, precision, qmm, quantization
 
-__all__ = ["flow_abstraction", "packing", "precision", "qmm", "quantization"]
+__all__ = [
+    "dispatch",
+    "flow_abstraction",
+    "packing",
+    "precision",
+    "qmm",
+    "quantization",
+]

@@ -21,7 +21,11 @@ Backends for the integer MM core:
                    interpret mode off-TPU.
 
 All backends return results that agree exactly (integer math) and match the
-dequantized FP reference to fp32 rounding — property-tested.
+dequantized FP reference to fp32 rounding — property-tested.  Because the
+backends agree numerically, ``backend="auto"`` is free to pick whichever is
+fastest: it consults the measured autotune cache in ``repro.core.dispatch``
+(keyed on shape, precision, and backend availability) instead of a
+hardcoded default.
 """
 
 from __future__ import annotations
@@ -119,7 +123,19 @@ def qmm(
                 f"operands W{w.bits}A{x.bits} do not match engine mode {mode.name}"
             )
     if backend == "auto":
-        backend = "mxu"
+        # Measured dispatch (core.dispatch): look up — or time-and-record —
+        # the winning backend for this (M, K, N, precisions, phase) key.
+        # Under jax.jit this runs once at trace time (shapes are static).
+        from repro.core import dispatch
+
+        x_l, w_l = x.logical_shape, w.logical_shape
+        m = 1
+        for d in x_l[:-1]:
+            m *= int(d)
+        rank2 = len(x_l) == 2 and len(w_l) == 2  # pallas needs rank-2
+        backend = dispatch.choose_backend(
+            m, int(x_l[-1]), int(w_l[-1]), x.bits, w.bits, rank2=rank2
+        )
     if backend == "mxu":
         return flow_abstraction.qmm_flow(
             x, w, int_matmul=None, w_colsum=w_colsum, out_dtype=out_dtype

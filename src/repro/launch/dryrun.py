@@ -20,6 +20,11 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
       --shape train_4k --mesh single            # one cell
   PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smoke       # CI cell
+
+``--arch smoke`` lowers+compiles a reduced (smoke-variant) config on a tiny
+train shape — the CI-sized proof that the whole lower/compile/artifact
+pipeline works, in seconds instead of hours.
 """
 
 import argparse
@@ -293,8 +298,13 @@ def run_cell(
 ) -> dict:
     from repro.launch.mesh import make_production_mesh
 
-    cfg = apply_opts(get_config(arch), opts)
-    shape = SHAPES_BY_NAME[shape_name]
+    if arch == "smoke":
+        from repro.configs.smoke import smoke_variant
+
+        cfg = apply_opts(smoke_variant(get_config("granite-8b")), opts)
+    else:
+        cfg = apply_opts(get_config(arch), opts)
+    shape = SMOKE_SHAPE if shape_name == SMOKE_SHAPE.name else SHAPES_BY_NAME[shape_name]
     record: dict = {
         "arch": arch,
         "shape": shape_name,
@@ -367,10 +377,16 @@ def cell_path(out_dir: str, arch: str, shape: str, mesh_kind: str, suffix: str =
     return os.path.join(out_dir, f"{arch}__{shape}__{mesh_kind}{tail}.json")
 
 
+#: The CI cell: reduced config, reduced shape — lower+compile in seconds.
+SMOKE_SHAPE = InputShape("smoke", 128, 8, "train")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", choices=list(ASSIGNED), default=None)
-    ap.add_argument("--shape", choices=list(SHAPES_BY_NAME), default=None)
+    ap.add_argument("--arch", choices=list(ASSIGNED) + ["smoke"], default=None)
+    ap.add_argument(
+        "--shape", choices=list(SHAPES_BY_NAME) + [SMOKE_SHAPE.name], default=None
+    )
     ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
     ap.add_argument("--all", action="store_true", help="sweep every cell")
     ap.add_argument("--out", default="artifacts/dryrun")
@@ -383,7 +399,10 @@ def main() -> None:
 
     os.makedirs(args.out, exist_ok=True)
     archs = list(ASSIGNED) if (args.all or args.arch is None) else [args.arch]
-    shapes = list(SHAPES_BY_NAME) if (args.all or args.shape is None) else [args.shape]
+    if args.arch == "smoke" and args.shape is None and not args.all:
+        shapes = [SMOKE_SHAPE.name]
+    else:
+        shapes = list(SHAPES_BY_NAME) if (args.all or args.shape is None) else [args.shape]
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
 
     for arch in archs:

@@ -12,18 +12,38 @@ state (the dry-run must set XLA_FLAGS before any jax initialization).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+try:  # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax: every axis is Auto already
+    AxisType = None
+
+__all__ = ["make_production_mesh", "make_host_mesh", "abstract_mesh"]
+
+
+def _make_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def abstract_mesh(shape, axes):
+    """Device-free mesh for spec-legality checks, across jax API versions.
+
+    jax >= 0.5 takes ``AbstractMesh(shape, axis_names)``; 0.4.x takes a
+    single tuple of ``(name, size)`` pairs.
+    """
+    try:
+        return jax.sharding.AbstractMesh(shape, axes)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """(16, 16) 'data','model' per pod; (2, 16, 16) with a 'pod' DP axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -31,6 +51,4 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     if data * model > n:
         raise ValueError(f"mesh {data}x{model} exceeds {n} devices")
-    return jax.make_mesh(
-        (data, model), ("data", "model"), axis_types=(AxisType.Auto, AxisType.Auto)
-    )
+    return _make_mesh((data, model), ("data", "model"))

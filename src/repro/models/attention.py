@@ -328,10 +328,10 @@ def attention(
     causal = cfg.causal if causal is None else causal
     window = cfg.window_size if kind == "l" else 0
 
-    q = _split_heads(L.qlinear(p["q"], x, quant, mode), h, dh)
+    q = _split_heads(L.qlinear(p["q"], x, quant, mode, name="attn.q"), h, dh)
     if kv_override is None:
-        k = _split_heads(L.qlinear(p["k"], x, quant, mode), kvh, dh)
-        v = _split_heads(L.qlinear(p["v"], x, quant, mode), kvh, dh)
+        k = _split_heads(L.qlinear(p["k"], x, quant, mode, name="attn.k"), kvh, dh)
+        v = _split_heads(L.qlinear(p["v"], x, quant, mode, name="attn.v"), kvh, dh)
     else:
         k, v = kv_override
 
@@ -464,7 +464,9 @@ def attention(
                 src_v = _dequantize_from_cache(src_v, v_sc, v_off, x.dtype)
             ctx = _pv_float(probs, _gqa_expand(src_v, h) if expand else src_v, x.dtype)
 
-    out = L.qlinear(p["o"], _merge_heads(ctx).astype(x.dtype), quant, mode)
+    out = L.qlinear(
+        p["o"], _merge_heads(ctx).astype(x.dtype), quant, mode, name="attn.o"
+    )
     return out, new_cache
 
 
@@ -517,11 +519,11 @@ def _mla_q(p, x, cfg, mode, positions):
     m, h = cfg.mla, cfg.n_heads
     qd = m.qk_nope_dim + m.qk_rope_dim
     if m.q_lora_rank:
-        qc = L.qlinear(p["q_down"], x, cfg.quant, mode)
+        qc = L.qlinear(p["q_down"], x, cfg.quant, mode, name="attn.q_down")
         qc = L.rmsnorm(p["q_norm_lora"], qc, cfg.norm_eps)
-        q = L.qlinear(p["q_up"], qc, cfg.quant, mode)
+        q = L.qlinear(p["q_up"], qc, cfg.quant, mode, name="attn.q_up")
     else:
-        q = L.qlinear(p["q_proj"], x, cfg.quant, mode)
+        q = L.qlinear(p["q_proj"], x, cfg.quant, mode, name="attn.q")
     q = q.reshape(*x.shape[:-1], h, qd)
     q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
     q_rope = L.rope(q_rope, positions, cfg.rope_theta)
@@ -546,9 +548,9 @@ def mla_attention(
     scale = 1.0 / jnp.sqrt(jnp.float32(m.qk_nope_dim + m.qk_rope_dim))
 
     q_nope, q_rope = _mla_q(p, x, cfg, mode, positions)
-    ckv = L.qlinear(p["kv_down"], x, quant, mode)
+    ckv = L.qlinear(p["kv_down"], x, quant, mode, name="attn.kv_down")
     ckv = L.rmsnorm(p["kv_norm"], ckv, cfg.norm_eps)
-    k_rope = L.qlinear(p["k_rope"], x, quant, mode)  # (B,S,dr), single head
+    k_rope = L.qlinear(p["k_rope"], x, quant, mode, name="attn.k_rope")  # (B,S,dr)
     k_rope = L.rope(k_rope, positions, cfg.rope_theta)
 
     decode = cache is not None and s == 1
@@ -643,14 +645,22 @@ def mla_attention(
         w_uv_h = w_uv.reshape(m.kv_lora_rank, h, m.v_head_dim)
         ctx = jnp.einsum("bshr,rhd->bshd", ctx_lat, w_uv_h.astype(jnp.float32))
         out = L.qlinear(
-            p["o"], ctx.reshape(b, s, h * m.v_head_dim).astype(x.dtype), quant, mode
+            p["o"],
+            ctx.reshape(b, s, h * m.v_head_dim).astype(x.dtype),
+            quant,
+            mode,
+            name="attn.o",
         )
         return out, cache
 
     # ---- decompressed prefill / train ----
     sdt = jnp.bfloat16 if cfg.attn_scores_dtype == "bf16" else jnp.float32
-    k_nope = L.qlinear(p["k_up"], ckv, quant, mode).reshape(b, s, h, m.qk_nope_dim)
-    v = L.qlinear(p["v_up"], ckv, quant, mode).reshape(b, s, h, m.v_head_dim)
+    k_nope = L.qlinear(
+        p["k_up"], ckv, quant, mode, name="attn.k_up"
+    ).reshape(b, s, h, m.qk_nope_dim)
+    v = L.qlinear(
+        p["v_up"], ckv, quant, mode, name="attn.v_up"
+    ).reshape(b, s, h, m.v_head_dim)
     if mode == "train" and quant.enabled and quant.quantize_attention:
         q_nope = Q.fake_quant(q_nope, quant.attn_act_bits)
         k_nope = Q.fake_quant(k_nope, quant.attn_act_bits)
@@ -664,7 +674,9 @@ def mla_attention(
     if mode == "train" and quant.enabled and quant.quantize_attention:
         probs = Q.fake_quant(probs, quant.attn_act_bits)
     ctx = jnp.einsum("bhst,bthd->bshd", probs.astype(x.dtype), v)
-    out = L.qlinear(p["o"], ctx.reshape(b, s, h * m.v_head_dim), quant, mode)
+    out = L.qlinear(
+        p["o"], ctx.reshape(b, s, h * m.v_head_dim), quant, mode, name="attn.o"
+    )
     return out, cache
 
 

@@ -86,8 +86,14 @@ def qlinear(
     mode: str,
     *,
     act_bits: Optional[int] = None,
+    name: str = "",
 ) -> jax.Array:
-    """``x (..., K) @ W (K, N)`` in the configured execution mode."""
+    """``x (..., K) @ W (K, N)`` in the configured execution mode.
+
+    ``name`` identifies the layer site (e.g. "ffn.up") for per-layer backend
+    overrides (``QuantConfig.backend_overrides``); unnamed sites use the
+    config's default backend.
+    """
     if mode == "float" or not quant.enabled:
         w = p["w"] if "w" in p else None
         if w is None:
@@ -117,7 +123,7 @@ def qlinear(
             bits=bits,
         )
         out = QE.qmm(
-            x2, wq, backend=quant.backend, w_colsum=p.get("w_colsum")
+            x2, wq, backend=quant.backend_for(name), w_colsum=p.get("w_colsum")
         )
         return out.reshape(*lead, -1).astype(x.dtype)
 
@@ -185,14 +191,21 @@ def init_ffn(key, cfg_ffn_type: str, d_model: int, d_ff: int):
     return p
 
 
-def ffn(p: dict, x: jax.Array, ffn_type: str, quant: QuantConfig, mode: str):
-    up = qlinear(p["up"], x, quant, mode)
+def ffn(
+    p: dict,
+    x: jax.Array,
+    ffn_type: str,
+    quant: QuantConfig,
+    mode: str,
+    name: str = "ffn",
+):
+    up = qlinear(p["up"], x, quant, mode, name=f"{name}.up")
     if ffn_type.endswith("glu"):
-        gate = qlinear(p["gate"], x, quant, mode)
+        gate = qlinear(p["gate"], x, quant, mode, name=f"{name}.gate")
         h = _act(ffn_type, gate) * up
     else:
         h = _act(ffn_type, up)
-    return qlinear(p["down"], h, quant, mode)
+    return qlinear(p["down"], h, quant, mode, name=f"{name}.down")
 
 
 # ---------------------------------------------------------------------------

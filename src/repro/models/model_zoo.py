@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import dispatch
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models import transformer as T
@@ -280,21 +281,27 @@ def prefill(
     cache: dict,
     frontend: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, dict]:
-    """Process the prompt; returns (last-position logits (B,V), cache)."""
-    b, s = tokens.shape
-    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
-    encoder_out = None
-    if cfg.encoder is not None and cfg.encoder.n_layers and frontend is not None:
-        encoder_out = _run_encoder(params, frontend, cfg, "serve")
-        cache = dict(cache, encoder_out=encoder_out.astype(jnp.bfloat16))
-    x = _embed_inputs(params, tokens, cfg, positions, frontend, "serve")
-    x = x.astype(jnp.bfloat16)
-    x, new_stack, _ = T.stack_apply(
-        params["stack"], x, cfg, "serve", positions, cache["stack"], encoder_out
-    )
-    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
-    logits = L.unembed(params, x, cfg.tie_embeddings)[:, 0]
-    return logits, dict(cache, stack=new_stack)
+    """Process the prompt; returns (last-position logits (B,V), cache).
+
+    Runs under the "prefill" autotune phase: its QMMs see M = batch x
+    prompt, orders of magnitude larger than decode's M = batch, so the
+    measured backend choice is tuned (and cached) independently.
+    """
+    with dispatch.tuning_phase("prefill"):
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        encoder_out = None
+        if cfg.encoder is not None and cfg.encoder.n_layers and frontend is not None:
+            encoder_out = _run_encoder(params, frontend, cfg, "serve")
+            cache = dict(cache, encoder_out=encoder_out.astype(jnp.bfloat16))
+        x = _embed_inputs(params, tokens, cfg, positions, frontend, "serve")
+        x = x.astype(jnp.bfloat16)
+        x, new_stack, _ = T.stack_apply(
+            params["stack"], x, cfg, "serve", positions, cache["stack"], encoder_out
+        )
+        x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        logits = L.unembed(params, x, cfg.tie_embeddings)[:, 0]
+        return logits, dict(cache, stack=new_stack)
 
 
 def decode_step(
@@ -303,22 +310,25 @@ def decode_step(
     cfg: ArchConfig,
     cache: dict,
 ) -> Tuple[jax.Array, dict]:
-    """One decode step. tokens (B,) int32 -> logits (B, V) + updated cache."""
-    b = tokens.shape[0]
-    pos_scalar = _cache_pos(cache["stack"], cfg)
-    positions = jnp.broadcast_to(pos_scalar[None, None], (b, 1))
-    x = L.embed(params, tokens[:, None], cfg.d_model)
-    if cfg.pos_embedding == "learned":
-        pe = jnp.take(params["pos_embedding"], positions, axis=0)
-        x = x + pe.astype(x.dtype)
-    x = x.astype(jnp.bfloat16)
-    encoder_out = cache.get("encoder_out")
-    x, new_stack, _ = T.stack_apply(
-        params["stack"], x, cfg, "serve", positions, cache["stack"], encoder_out
-    )
-    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = L.unembed(params, x, cfg.tie_embeddings)[:, 0]
-    return logits, dict(cache, stack=new_stack)
+    """One decode step. tokens (B,) int32 -> logits (B, V) + updated cache.
+
+    Runs under the "decode" autotune phase (see ``prefill``)."""
+    with dispatch.tuning_phase("decode"):
+        b = tokens.shape[0]
+        pos_scalar = _cache_pos(cache["stack"], cfg)
+        positions = jnp.broadcast_to(pos_scalar[None, None], (b, 1))
+        x = L.embed(params, tokens[:, None], cfg.d_model)
+        if cfg.pos_embedding == "learned":
+            pe = jnp.take(params["pos_embedding"], positions, axis=0)
+            x = x + pe.astype(x.dtype)
+        x = x.astype(jnp.bfloat16)
+        encoder_out = cache.get("encoder_out")
+        x, new_stack, _ = T.stack_apply(
+            params["stack"], x, cfg, "serve", positions, cache["stack"], encoder_out
+        )
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.unembed(params, x, cfg.tie_embeddings)[:, 0]
+        return logits, dict(cache, stack=new_stack)
 
 
 def _cache_pos(stack_cache: dict, cfg: ArchConfig):

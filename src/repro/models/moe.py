@@ -53,7 +53,11 @@ def pack_experts_for_serving(p: dict, quant: QuantConfig) -> dict:
 
 
 def expert_qlinear(p: dict, x: jax.Array, quant: QuantConfig, mode: str, k: int):
-    """``x (E, C, K) @ W (E, K, N)`` per expert, in the execution mode."""
+    """``x (E, C, K) @ W (E, K, N)`` per expert, in the execution mode.
+
+    Serve mode always runs the MXU integer flow: the stacked-expert batched
+    MM has no popcount/pallas counterpart, so ``backend="auto"`` and
+    ``backend_overrides`` do not apply here (docs/qmm-engine.md)."""
     if mode == "float" or not quant.enabled:
         return jnp.einsum("eck,ekn->ecn", x, p["w"].astype(x.dtype))
     if mode == "train":

@@ -170,7 +170,7 @@ def ssd_mixer(
     gz = s_cfg.n_groups * s_cfg.d_state
     b, s, _ = x.shape
 
-    zxbcdt = L.qlinear(p["in_proj"], x, cfg.quant, mode)
+    zxbcdt = L.qlinear(p["in_proj"], x, cfg.quant, mode, name="ssm.in_proj")
     z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * gz], axis=-1)
     # xbc: (B, S, di + 2*gz) goes through the short conv
     if state is not None and s == 1:
@@ -225,7 +225,7 @@ def ssd_mixer(
 
     # gated RMSNorm then output projection (both full-precision norm + QMM)
     y = L.rmsnorm(p["norm_g"], y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), cfg.norm_eps)
-    out = L.qlinear(p["out_proj"], y, cfg.quant, mode)
+    out = L.qlinear(p["out_proj"], y, cfg.quant, mode, name="ssm.out_proj")
     return out, new_state
 
 
@@ -271,8 +271,8 @@ def rglru_mixer(
     """RG-LRU block (Griffin/recurrentgemma):
     branches -> conv1d(4) -> gated linear recurrence -> gated output."""
     b, s, d = x.shape
-    xb = L.qlinear(p["in_x"], x, cfg.quant, mode)
-    gate = L.qlinear(p["in_gate"], x, cfg.quant, mode)
+    xb = L.qlinear(p["in_x"], x, cfg.quant, mode, name="rglru.in_x")
+    gate = L.qlinear(p["in_gate"], x, cfg.quant, mode, name="rglru.in_gate")
 
     # causal depthwise conv width 4
     if state is not None and s == 1:
@@ -287,10 +287,14 @@ def rglru_mixer(
 
     # gates (full precision — elementwise, not QMMs)
     r = jax.nn.sigmoid(
-        L.qlinear(p["gate_a"], xb, cfg.quant, mode).astype(jnp.float32)
+        L.qlinear(p["gate_a"], xb, cfg.quant, mode, name="rglru.gate_a").astype(
+            jnp.float32
+        )
     )
     i_g = jax.nn.sigmoid(
-        L.qlinear(p["gate_i"], xb, cfg.quant, mode).astype(jnp.float32)
+        L.qlinear(p["gate_i"], xb, cfg.quant, mode, name="rglru.gate_i").astype(
+            jnp.float32
+        )
     )
     log_a_base = -_RGLRU_C * jax.nn.softplus(p["lambda_p"])  # log sigmoid-param
     log_a = log_a_base[None, None, :] * r  # (B,S,di)
@@ -320,4 +324,4 @@ def rglru_mixer(
             new_state = None
 
     out = y.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
-    return L.qlinear(p["out"], out, cfg.quant, mode), new_state
+    return L.qlinear(p["out"], out, cfg.quant, mode, name="rglru.out"), new_state

@@ -111,8 +111,12 @@ def block_apply(
     if "cross_attn" in p and encoder_out is not None:
         h = L.rmsnorm(p["ln_cross"], x, cfg.norm_eps)
         kvh, dh = cfg.n_kv_heads, cfg.d_head
-        ck = L.qlinear(p["cross_attn"]["k"], encoder_out, cfg.quant, mode)
-        cv = L.qlinear(p["cross_attn"]["v"], encoder_out, cfg.quant, mode)
+        ck = L.qlinear(
+            p["cross_attn"]["k"], encoder_out, cfg.quant, mode, name="cross_attn.k"
+        )
+        cv = L.qlinear(
+            p["cross_attn"]["v"], encoder_out, cfg.quant, mode, name="cross_attn.v"
+        )
         ck = ck.reshape(*encoder_out.shape[:-1], kvh, dh)
         cv = cv.reshape(*encoder_out.shape[:-1], kvh, dh)
         mix, _ = A.attention(

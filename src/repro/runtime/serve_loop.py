@@ -15,11 +15,19 @@ Components:
 The decode step is the latency-critical path: one token per call against a
 cache of ``max_len`` — its roofline is memory-bound, which is exactly where
 the 1-bit packed weights + int8 KV cache pay off (EXPERIMENTS.md §Roofline).
+
+With ``backend="auto"`` in the quant config, prefill and decode QMMs
+(dense and attention projections; MoE expert MMs always use the MXU flow)
+tune under separate autotune keys ("prefill" vs "decode" phases, set in
+model_zoo) — their M dims differ by orders of magnitude, so the winning
+backend can differ too.  Pass ``autotune_cache_path`` to ``ServeEngine`` to
+persist/restore the measured verdicts across serving processes.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Callable, List, Optional
 
 import jax
@@ -28,6 +36,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core import dispatch
 from repro.models import model_zoo as Z
 from repro.runtime import sharding as SH
 
@@ -113,7 +122,13 @@ class ServeEngine:
         batch_slots: int = 4,
         max_len: int = 256,
         seed: int = 0,
+        autotune_cache_path: Optional[str] = None,
     ):
+        """``autotune_cache_path``: optional JSON file for the QMM autotune
+        cache (core.dispatch).  Loaded at engine start (a warm serving
+        process skips backend re-timing entirely) and written back after
+        each ``run`` so the next process inherits fresh verdicts.  Only
+        meaningful when the arch's quant config uses ``backend="auto"``."""
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
@@ -122,6 +137,9 @@ class ServeEngine:
         mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
         self.mesh = mesh
         self._decode = None  # built lazily per batch size
+        self.autotune_cache_path = autotune_cache_path
+        if autotune_cache_path and os.path.exists(autotune_cache_path):
+            dispatch.get_cache().load(autotune_cache_path)
 
     def _sample(self, logits: np.ndarray, temperature: float) -> int:
         if temperature <= 0:
@@ -171,4 +189,6 @@ class ServeEngine:
             for r, o in zip(wave, outs):
                 r.output = o[: r.max_new_tokens]
                 done.append(r)
+        if self.autotune_cache_path:
+            dispatch.get_cache().save(self.autotune_cache_path)
         return done

@@ -4,6 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # optional test dep; gate, don't fail collection
 from hypothesis import given, settings, strategies as st
 
 from repro.optim import compression as C

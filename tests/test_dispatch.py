@@ -1,0 +1,314 @@
+"""Autotuned QMM dispatch: keying, persistence, overrides, backend parity.
+
+The fake-timer tests determinize the "which backend wins" question (the
+timer is injectable); the real-timer test asserts internal consistency and
+the one measured fact that is robust on any host: at a large-M 1-bit x
+1-bit shape the packed popcount path beats unpacking for the MXU path by a
+wide margin, so ``backend="auto"`` must select a non-mxu backend there.
+"""
+
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import QuantConfig
+from repro.core import dispatch
+from repro.core import flow_abstraction as FA
+from repro.core import packing
+from repro.core import qmm as QE
+from repro.core import quantization as Q
+from repro.kernels import ref
+
+RNG = np.random.default_rng(99)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_default_cache():
+    """Isolate the process-wide cache per test."""
+    dispatch.reset_cache()
+    yield
+    dispatch.reset_cache()
+
+
+def seq_timer(values):
+    """Fake timer returning ``values`` in candidate order (mxu, popcount,
+    pallas when eligible) — determinizes the winner."""
+    it = iter(values)
+
+    def timer(fn):
+        return next(it)
+
+    return timer
+
+
+def _quant_pair(m, k, n, act_bits, weight_bits=1):
+    x = jnp.asarray(RNG.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(RNG.standard_normal((k, n)).astype(np.float32))
+    xq = Q.quantize_activation(x, act_bits)
+    wq = Q.quantize_weight(w, weight_bits)
+    return xq, wq
+
+
+# ---------------------------------------------------------------------------
+# cache keying
+# ---------------------------------------------------------------------------
+
+
+def test_distinct_shapes_and_precisions_get_distinct_entries():
+    cache = dispatch.AutotuneCache(timer=seq_timer([1.0] * 100))
+    cache.choose(8, 64, 32, 1, 1)
+    assert len(cache) == 1
+    cache.choose(8, 64, 32, 1, 1)  # same key: served from cache
+    assert len(cache) == 1
+    cache.choose(8, 64, 64, 1, 1)  # different N
+    cache.choose(8, 128, 32, 1, 1)  # different K
+    cache.choose(8, 64, 32, 8, 1)  # different act precision
+    cache.choose(1024, 64, 32, 1, 1)  # different M bucket
+    assert len(cache) == 5
+
+
+def test_repeat_lookup_does_not_retime():
+    cache = dispatch.AutotuneCache(timer=seq_timer([1.0] * 10))
+    cache.choose(8, 64, 32, 1, 1)
+    runs = cache.timing_runs
+    assert runs > 0
+    for _ in range(5):
+        cache.choose(8, 64, 32, 1, 1)
+    assert cache.timing_runs == runs
+
+
+def test_m_bucketing_shares_ragged_serving_waves():
+    """Prompt lengths 100 and 128 share a bucket; 129 starts a new one."""
+    cache = dispatch.AutotuneCache(timer=seq_timer([1.0] * 100))
+    cache.choose(100, 64, 32, 1, 1)
+    cache.choose(128, 64, 32, 1, 1)
+    assert len(cache) == 1
+    cache.choose(129, 64, 32, 1, 1)
+    assert len(cache) == 2
+
+
+def test_phase_tags_split_prefill_and_decode():
+    cache = dispatch.AutotuneCache(timer=seq_timer([1.0] * 100))
+    with dispatch.tuning_phase("prefill"):
+        cache.choose(8, 64, 32, 1, 1)
+    with dispatch.tuning_phase("decode"):
+        cache.choose(8, 64, 32, 1, 1)
+    assert len(cache) == 2
+    assert dispatch.current_phase() == ""
+
+
+def test_fake_timer_winner_is_recorded():
+    # candidates at this tiny shape: (mxu, popcount, pallas); make popcount win
+    cache = dispatch.AutotuneCache(timer=seq_timer([10.0, 1.0, 5.0]))
+    assert cache.choose(8, 64, 32, 1, 1) == "popcount"
+    (rec,) = cache.entries.values()
+    assert rec.timed and rec.backend == "popcount"
+    assert rec.backend == min(rec.timings_us, key=rec.timings_us.get)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance path: qmm(backend="auto") routes through the cache
+# ---------------------------------------------------------------------------
+
+
+def test_auto_routes_through_default_cache_and_matches_mxu():
+    cache = dispatch.reset_cache(
+        dispatch.AutotuneCache(timer=seq_timer([10.0, 1.0, 5.0] * 10))
+    )
+    xq, wq = _quant_pair(16, 64, 32, 1)
+    out = QE.qmm(xq, wq, backend="auto")
+    assert len(cache) == 1
+    (rec,) = cache.entries.values()
+    assert rec.backend == "popcount"  # the fake-timed winner, not hardcoded mxu
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(QE.qmm(xq, wq, backend="mxu")),
+        rtol=1e-5,
+        atol=1e-4,
+    )
+
+
+def test_real_timing_selects_non_mxu_for_large_binary_qmm():
+    """W1A1 at M=256: packed AND+popcount skips the unpack the MXU path
+    pays; the measured winner is consistently non-mxu off-TPU (~8x margin
+    on CPU).  On TPU the MXU can legitimately win, so skip there."""
+    from repro.kernels import ops
+
+    if ops.on_tpu():
+        pytest.skip("off-TPU measurement claim; MXU may win on TPU")
+    cache = dispatch.AutotuneCache()
+    chosen = cache.choose(256, 768, 768, 1, 1)
+    (rec,) = cache.entries.values()
+    # internal consistency: the recorded winner is the argmin of its timings
+    assert chosen == min(rec.timings_us, key=rec.timings_us.get)
+    assert chosen != "mxu"
+
+
+def test_auto_works_under_jit():
+    cache = dispatch.reset_cache(
+        dispatch.AutotuneCache(timer=seq_timer([1.0] * 100))
+    )
+    xq, wq = _quant_pair(16, 64, 32, 4)
+
+    fn = jax.jit(lambda a, b: QE.qmm(a, b, backend="auto"))
+    out = fn(xq, wq)
+    assert len(cache) >= 1  # tuned once, at trace time
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(QE.qmm(xq, wq, backend="mxu")),
+        rtol=1e-5,
+        atol=1e-4,
+    )
+
+
+def test_env_kill_switch_disables_tuning(monkeypatch):
+    monkeypatch.setenv("REPRO_QMM_AUTOTUNE", "0")
+    cache = dispatch.reset_cache(
+        dispatch.AutotuneCache(timer=seq_timer([1.0] * 10))
+    )
+    assert dispatch.choose_backend(8, 64, 32, 1, 1) == dispatch.DEFAULT_BACKEND
+    assert len(cache) == 0 and cache.timing_runs == 0
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+
+def test_persist_reload_round_trip_skips_retiming(tmp_path):
+    path = str(tmp_path / "autotune.json")
+    cache = dispatch.AutotuneCache(timer=seq_timer([3.0, 1.0, 2.0] * 10))
+    first = cache.choose(8, 64, 32, 1, 1)
+    cache.choose(8, 64, 64, 8, 1, tag="decode")
+    cache.save(path)
+
+    fresh = dispatch.AutotuneCache(timer=seq_timer([99.0] * 10))
+    assert fresh.load(path) == 2
+    assert fresh.choose(8, 64, 32, 1, 1) == first
+    assert fresh.choose(8, 64, 64, 8, 1, tag="decode") == "popcount"
+    assert fresh.timing_runs == 0  # persisted verdicts, no warmup
+
+    blob = json.load(open(path))
+    assert blob["version"] == 1
+    assert {e["backend"] for e in blob["entries"]} <= set(dispatch.BACKENDS)
+
+
+def test_failed_tuning_falls_back_but_is_never_persisted(tmp_path):
+    """A timing pass where every probe raises yields an in-process mxu
+    fallback; save() must not write it, so the next process re-times."""
+
+    def exploding_timer(fn):
+        raise RuntimeError("transient OOM")
+
+    path = str(tmp_path / "autotune.json")
+    cache = dispatch.AutotuneCache(timer=exploding_timer)
+    assert cache.choose(8, 64, 32, 1, 1) == dispatch.DEFAULT_BACKEND
+    (rec,) = cache.entries.values()
+    assert rec.failed and not rec.timed
+    cache.save(path)
+    assert json.load(open(path))["entries"] == []
+    fresh = dispatch.AutotuneCache(timer=seq_timer([3.0, 1.0, 2.0]))
+    fresh.load(path)
+    assert fresh.choose(8, 64, 32, 1, 1) == "popcount"  # re-timed, not pinned
+
+
+def test_load_skips_unknown_backends(tmp_path):
+    path = str(tmp_path / "autotune.json")
+    cache = dispatch.AutotuneCache(timer=seq_timer([1.0] * 10))
+    cache.choose(8, 64, 32, 1, 1)
+    blob = cache.to_json()
+    blob["entries"][0]["backend"] = "fpga"  # a backend this build lacks
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    assert dispatch.AutotuneCache().load(path) == 0
+
+
+# ---------------------------------------------------------------------------
+# forced per-layer overrides
+# ---------------------------------------------------------------------------
+
+
+def test_backend_for_resolves_overrides():
+    q = QuantConfig(
+        backend="mxu",
+        backend_overrides=(("ffn.down", "popcount"), ("attn.*", "pallas")),
+    )
+    assert q.backend_for("ffn.down") == "popcount"
+    assert q.backend_for("ffn.up") == "mxu"
+    assert q.backend_for("attn.q") == "pallas"
+    assert q.backend_for("") == "mxu"
+
+
+def test_quant_config_rejects_unknown_backends():
+    with pytest.raises(ValueError, match="unknown backend 'dsp'"):
+        QuantConfig(backend="dsp")
+    with pytest.raises(ValueError, match="popcnt"):
+        QuantConfig(backend_overrides=(("ffn.down", "popcnt"),))
+
+
+def test_qlinear_threads_forced_backend(monkeypatch):
+    from repro.models import layers as L
+
+    seen = []
+    real_qmm = QE.qmm
+
+    def spy(x, w, **kw):
+        seen.append(kw.get("backend"))
+        return real_qmm(x, w, **kw)
+
+    monkeypatch.setattr(L.QE, "qmm", spy)
+    quant = QuantConfig(
+        act_bits=4, backend="mxu", backend_overrides=(("proj", "popcount"),)
+    )
+    p = L.init_linear(jax.random.PRNGKey(0), 64, 32)
+    sp = L.pack_linear_for_serving(p, quant)
+    x = jnp.asarray(RNG.standard_normal((4, 64)).astype(np.float32))
+    forced = L.qlinear(sp, x, quant, "serve", name="proj")
+    default = L.qlinear(sp, x, quant, "serve")
+    assert seen == ["popcount", "mxu"]
+    np.testing.assert_allclose(
+        np.asarray(forced), np.asarray(default), rtol=1e-4, atol=1e-3
+    )
+
+
+# ---------------------------------------------------------------------------
+# numerical parity: every dispatched backend vs the kernels/ref.py oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", dispatch.BACKENDS)
+@pytest.mark.parametrize("act_bits", [1, 4, 8])
+def test_backend_parity_act_weight(backend, act_bits):
+    xq, wq = _quant_pair(16, 96, 24, act_bits)
+    expect = FA.qmm_dequant_reference(xq, wq)
+    out = QE.qmm(xq, wq, backend=backend)
+    tol = 3e-5 * max(1.0, float(jnp.max(jnp.abs(expect))))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=tol)
+
+
+@pytest.mark.parametrize("backend", dispatch.BACKENDS)
+def test_backend_parity_act_act(backend):
+    a = jnp.asarray(RNG.standard_normal((12, 40)).astype(np.float32))
+    b = jnp.asarray(RNG.standard_normal((40, 20)).astype(np.float32))
+    aq = Q.quantize_activation(a, 4)
+    bq = Q.quantize_activation(b, 4)
+    expect = FA.qmm_dequant_reference(aq, bq)
+    out = QE.qmm(aq, bq, backend=backend)
+    tol = 3e-4 * max(1.0, float(jnp.max(jnp.abs(expect))))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=tol)
+
+
+def test_popcount_core_matches_bitserial_oracle():
+    """The popcount backend's integer core == ref.bitserial_qmm_ref == A @ B."""
+    m, k, n, bits = 16, 128, 24, 4
+    a = RNG.integers(0, 2**bits, size=(m, k)).astype(np.int32)
+    b = RNG.integers(0, 2**bits, size=(k, n)).astype(np.int32)
+    core = QE.popcount_int_matmul(jnp.asarray(a), jnp.asarray(b), bits, bits)
+    apl = packing.pack_bitplanes(jnp.asarray(a), bits, axis=-1)
+    bpl = packing.pack_bitplanes(jnp.asarray(b), bits, axis=-2)
+    oracle = ref.bitserial_qmm_ref(apl, bpl, k)
+    np.testing.assert_array_equal(np.asarray(core), np.asarray(oracle))
+    np.testing.assert_array_equal(np.asarray(core), a @ b)

@@ -9,6 +9,7 @@ both QMM types, every engine precision mode, and every integer backend.
 import numpy as np
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # optional test dep; gate, don't fail collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import flow_abstraction as FA
