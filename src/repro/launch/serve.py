@@ -5,10 +5,19 @@
 
 Initializes a model, runs the offline weight pipeline (binarize -> bit-pack
 -> colsum fold, the paper's 'performed offline' step), and serves a queue of
-synthetic requests through the slot-batched engine.
+requests through the slot-managed continuous-batching engine.
+
+Two request sources:
+
+* fixed queue (default): ``--requests`` identical-shape prompts, all
+  arriving at t=0 — the quick eyeball run.
+* open-loop traffic (``--traffic``): seeded Poisson arrivals with uniform
+  prompt/output length ranges (runtime.traffic) — the serve_bench workload;
+  add ``--bench-out`` to persist the BENCH_serve.json summary.
 """
 
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -17,6 +26,12 @@ from repro.configs import get_config, list_configs
 from repro.configs.smoke import smoke_variant
 from repro.models import model_zoo as Z
 from repro.runtime.serve_loop import Request, ServeEngine
+from repro.runtime.traffic import (
+    TrafficConfig,
+    generate_requests,
+    save_bench,
+    summarize_bench,
+)
 
 
 def main() -> None:
@@ -30,6 +45,16 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as slots emit them (per-request callbacks)")
+    ap.add_argument("--autotune-cache", default=None,
+                    help="JSON path for persisted QMM autotune verdicts")
+    # open-loop traffic mode
+    ap.add_argument("--traffic", action="store_true",
+                    help="Poisson open-loop workload instead of the fixed queue")
+    ap.add_argument("--rate", type=float, default=8.0)
+    ap.add_argument("--bench-out", default=None,
+                    help="write the BENCH_serve.json summary here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -51,19 +76,37 @@ def main() -> None:
     )
 
     engine = ServeEngine(
-        cfg, serving, batch_slots=args.slots, max_len=args.max_len, seed=args.seed
+        cfg,
+        serving,
+        batch_slots=args.slots,
+        max_len=args.max_len,
+        seed=args.seed,
+        autotune_cache_path=args.autotune_cache,
     )
-    reqs = [
-        Request(
-            prompt=rng.integers(0, cfg.vocab_size, size=(args.prompt_len,)).astype(
-                np.int32
-            ),
-            max_new_tokens=args.max_new,
+    if args.traffic:
+        tc = TrafficConfig(
+            n_requests=args.requests,
+            rate_rps=args.rate,
+            prompt_len=(max(1, args.prompt_len // 2), args.prompt_len),
+            new_tokens=(max(1, args.max_new // 2), args.max_new),
             temperature=args.temperature,
+            seed=args.seed,
         )
-        for _ in range(args.requests)
-    ]
-    import time
+        reqs = generate_requests(tc, cfg.vocab_size)
+    else:
+        reqs = [
+            Request(
+                prompt=rng.integers(0, cfg.vocab_size, size=(args.prompt_len,)).astype(
+                    np.int32
+                ),
+                max_new_tokens=args.max_new,
+                temperature=args.temperature,
+            )
+            for _ in range(args.requests)
+        ]
+    if args.stream:
+        for i, r in enumerate(reqs):
+            r.on_token = lambda tok, i=i: print(f"  [stream] req{i} -> {tok}")
 
     t0 = time.perf_counter()
     done = engine.run(reqs)
@@ -72,7 +115,18 @@ def main() -> None:
     print(f"[serve] {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s incl. compile)")
     for i, r in enumerate(done[:4]):
-        print(f"  req{i}: prompt[:4]={r.prompt[:4].tolist()} -> out[:8]={r.output[:8]}")
+        print(f"  req{i}: prompt[:4]={np.asarray(r.prompt)[:4].tolist()} -> out[:8]={r.output[:8]}")
+    if args.bench_out:
+        summary = summarize_bench(
+            done, dt,
+            {"arch": args.arch, "smoke": bool(args.smoke),
+             "batch_slots": args.slots, "max_len": args.max_len,
+             "traffic": args.traffic},
+        )
+        save_bench(args.bench_out, summary)
+        print(f"[serve] bench summary -> {args.bench_out} "
+              f"(rps={summary['rps']:.2f}, p50={summary['p50_ms']:.1f}ms, "
+              f"p99={summary['p99_ms']:.1f}ms)")
 
 
 if __name__ == "__main__":

@@ -71,6 +71,14 @@ def init_attention(key, cfg: ArchConfig, cross: bool = False) -> dict:
 def init_kv_cache(
     batch: int, max_len: int, cfg: ArchConfig, kind: str = "g", dtype=jnp.bfloat16
 ) -> dict:
+    """KV cache with PER-ROW serving state.
+
+    ``pos`` and the calibration affines are shape ``(batch,)``: each batch
+    row (a serving *slot*) carries its own cursor and quantization grid, so
+    a packed decode batch may hold requests at different sequence positions
+    (continuous batching) and a slot prefilled alone is bit-identical to the
+    same request served in a full batch.
+    """
     kvh, dh = cfg.n_kv_heads, cfg.d_head
     q = cfg.quant
     if kind == "l" and cfg.window_size:
@@ -80,16 +88,16 @@ def init_kv_cache(
         return {
             "k": jnp.zeros((batch, max_len, kvh, dh), jnp.int8),
             "v": jnp.zeros((batch, max_len, kvh, dh), jnp.int8),
-            "k_scale": jnp.ones((), jnp.float32),
-            "k_offset": jnp.zeros((), jnp.float32),
-            "v_scale": jnp.ones((), jnp.float32),
-            "v_offset": jnp.zeros((), jnp.float32),
-            "pos": jnp.zeros((), jnp.int32),
+            "k_scale": jnp.ones((batch,), jnp.float32),
+            "k_offset": jnp.zeros((batch,), jnp.float32),
+            "v_scale": jnp.ones((batch,), jnp.float32),
+            "v_offset": jnp.zeros((batch,), jnp.float32),
+            "pos": jnp.zeros((batch,), jnp.int32),
         }
     return {
         "k": jnp.zeros((batch, max_len, kvh, dh), dtype),
         "v": jnp.zeros((batch, max_len, kvh, dh), dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -97,13 +105,36 @@ def _cache_quantized(cache: dict) -> bool:
     return cache is not None and "k_scale" in cache
 
 
+def _per_row(s, ndim: int):
+    """Broadcast a per-row ``(B,)`` cache affine against a ``(B, ...)``
+    operand of rank ``ndim`` (legacy scalar values pass through)."""
+    s = jnp.asarray(s)
+    if s.ndim == 0:
+        return s
+    return s.reshape(s.shape + (1,) * (ndim - 1))
+
+
+def _calibrate_rows(x: jax.Array):
+    """Per-row affine calibration: min/offset and (max-min)/255 scale reduced
+    over every axis but the batch row — co-batched requests never share a
+    quantization grid (the batch-invariance contract)."""
+    x32 = x.astype(jnp.float32).reshape(x.shape[0], -1)
+    off = jnp.min(x32, axis=-1)
+    sc = jnp.maximum((jnp.max(x32, axis=-1) - off) / 255.0, 1e-8)
+    return sc, off
+
+
 def _quantize_to_cache(x: jax.Array, scale, offset) -> jax.Array:
     """Quantize with a FIXED affine (prefill-calibrated), re-centered int8."""
+    scale = _per_row(scale, x.ndim)
+    offset = _per_row(offset, x.ndim)
     q = jnp.clip(jnp.round((x.astype(jnp.float32) - offset) / scale), 0.0, 255.0)
     return (q - 128.0).astype(jnp.int8)
 
 
 def _dequantize_from_cache(m: jax.Array, scale, offset, dtype):
+    scale = _per_row(scale, m.ndim)
+    offset = _per_row(offset, m.ndim)
     return ((m.astype(jnp.float32) + 128.0) * scale + offset).astype(dtype)
 
 
@@ -199,15 +230,17 @@ def _scores_int(q, k_mantissa, k_scale, k_offset, attn_bits: int):
     b, s, h, dh = q.shape
     t, kvh = k_mantissa.shape[1], k_mantissa.shape[2]
     g = h // kvh
-    qq = Q.quantize_activation(q.astype(jnp.float32), attn_bits)
+    # per-row calibration (axis 0 kept): co-batched slots stay independent
+    qq = Q.quantize_activation(q.astype(jnp.float32), attn_bits, per_channel_axis=0)
     qr = Q.recenter(qq)
     x1 = qr.mantissa.reshape(b, s, kvh, g, dh)  # int8
     x2 = k_mantissa.astype(jnp.int8)  # (B,T,kvH,dh)
     xy = _int_einsum("bskgd,btkd->bkgst", x1, x2).astype(jnp.float32)
     # affine epilogue: q = a1*x1 + g1 ; k = a2*x2 + g2 (cache affine, recentered)
-    a1, g1 = qr.scale, qr.offset
-    a2 = k_scale
-    g2 = k_offset + 128.0 * k_scale  # cache mantissa was re-centered by 128
+    a1 = jnp.reshape(qr.scale, (b, 1, 1, 1, 1))
+    g1 = jnp.reshape(qr.offset, (b, 1, 1, 1, 1))
+    a2 = _per_row(k_scale, 5)
+    g2 = _per_row(k_offset, 5) + 128.0 * a2  # cache mantissa was re-centered by 128
     row = jnp.sum(x1, axis=-1, dtype=jnp.int32).astype(jnp.float32)  # (B,S,kvH,G)
     row = row.transpose(0, 2, 3, 1)[..., None]  # (B,kvH,G,S,1)
     col = jnp.sum(x2, axis=-1, dtype=jnp.int32).astype(jnp.float32)  # (B,T,kvH)
@@ -224,8 +257,12 @@ def _write_prefill_cache(
     Full cache: place at [pos, pos+s).  Ring (windowed): keep only the last
     ``cache_len`` tokens, rolled so entry at absolute position p lands in
     slot ``p % W`` (assumes prefill starts from an empty cache — serving
-    resets slots between requests)."""
-    pos = cache["pos"]
+    resets slots between requests).
+
+    ``pos`` is per-row ``(B,)``; prefill requires all rows at the same
+    cursor (in serving, prefill always runs on a freshly reset cache), so
+    row 0's cursor indexes the batched write."""
+    pos = jnp.reshape(cache["pos"], (-1,))[0]
     if windowed and s >= cache_len:
         keep_k = k_m[:, s - cache_len :]
         keep_v = v_m[:, s - cache_len :]
@@ -235,7 +272,7 @@ def _write_prefill_cache(
     else:
         new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_m, pos, 1)
         new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_m, pos, 1)
-    out = dict(cache, k=new_k, v=new_v, pos=pos + s)
+    out = dict(cache, k=new_k, v=new_v, pos=cache["pos"] + s)
     if k_sc is not None:
         out.update(k_scale=k_sc, k_offset=k_off, v_scale=v_sc, v_offset=v_off)
     return out
@@ -250,14 +287,17 @@ def _scores_int_latent(q_abs, ckv_m, ckv_scale, ckv_offset, attn_bits: int):
     """
     b, s, h, r = q_abs.shape
     t = ckv_m.shape[1]
-    qq = Q.quantize_activation(q_abs.astype(jnp.float32), attn_bits)
+    # per-row (per-slot) activation grid: co-scheduled requests must not
+    # couple through a shared calibration (batch invariance)
+    qq = Q.quantize_activation(q_abs.astype(jnp.float32), attn_bits, per_channel_axis=0)
     qr = Q.recenter(qq)
     x1 = qr.mantissa.reshape(b, s * h, r)
     x2 = jnp.swapaxes(ckv_m, -1, -2).astype(jnp.int8)  # (b, r, t)
     xy = FA.default_int_matmul(x1, x2, attn_bits, 8).astype(jnp.float32)
-    a1, g1 = qr.scale, qr.offset
-    a2 = ckv_scale
-    g2 = ckv_offset + 128.0 * ckv_scale
+    a1 = jnp.reshape(qr.scale, (b, 1, 1))
+    g1 = jnp.reshape(qr.offset, (b, 1, 1))
+    a2 = _per_row(ckv_scale, 3)
+    g2 = _per_row(ckv_offset, 3) + 128.0 * a2
     row = jnp.sum(x1, axis=-1, dtype=jnp.int32)[..., None].astype(jnp.float32)
     col = jnp.sum(x2, axis=-2, dtype=jnp.int32)[..., None, :].astype(jnp.float32)
     out = xy * (a1 * a2) + (a1 * g2) * row + (g1 * a2) * col + g1 * g2 * r
@@ -279,8 +319,8 @@ def _pv_int(p_probs, v_mantissa, v_scale, v_offset):
     x1 = (pm - 128.0).astype(jnp.int8).reshape(b, kvh, g, s, t)
     a1, g1 = jnp.float32(1.0 / 255.0), jnp.float32(128.0 / 255.0)
     x2 = v_mantissa.astype(jnp.int8)  # (B,T,kvH,dh)
-    a2 = v_scale
-    g2 = v_offset + 128.0 * v_scale
+    a2 = _per_row(v_scale, 5)
+    g2 = _per_row(v_offset, 5) + 128.0 * a2
     xy = _int_einsum("bkgst,btkd->bkgsd", x1, x2).astype(jnp.float32)
     row = jnp.sum(x1, axis=-1, dtype=jnp.int32)[..., None].astype(jnp.float32)
     col = jnp.sum(x2, axis=1, dtype=jnp.int32).astype(jnp.float32)  # (B,kvH,dh)
@@ -373,10 +413,8 @@ def attention(
         sdt = jnp.bfloat16 if cfg.attn_scores_dtype == "bf16" else jnp.float32
         expand = cfg.gqa_mode == "expand"
         if use_int:
-            k32, v32 = k.astype(jnp.float32), v.astype(jnp.float32)
-            k_off, v_off = jnp.min(k32), jnp.min(v32)
-            k_sc = jnp.maximum((jnp.max(k32) - k_off) / 255.0, 1e-8)
-            v_sc = jnp.maximum((jnp.max(v32) - v_off) / 255.0, 1e-8)
+            k_sc, k_off = _calibrate_rows(k)
+            v_sc, v_off = _calibrate_rows(v)
             k_m = _quantize_to_cache(k, k_sc, k_off)
             v_m = _quantize_to_cache(v, v_sc, v_off)
             k_s = _gqa_expand(k_m, h) if expand else k_m
@@ -405,10 +443,8 @@ def attention(
                 v_m = v.astype(cache["v"].dtype)
                 k_sc = v_sc = k_off = v_off = None
             elif not use_int:
-                k32, v32 = k.astype(jnp.float32), v.astype(jnp.float32)
-                k_off, v_off = jnp.min(k32), jnp.min(v32)
-                k_sc = jnp.maximum((jnp.max(k32) - k_off) / 255.0, 1e-8)
-                v_sc = jnp.maximum((jnp.max(v32) - v_off) / 255.0, 1e-8)
+                k_sc, k_off = _calibrate_rows(k)
+                v_sc, v_off = _calibrate_rows(v)
                 k_m = _quantize_to_cache(k, k_sc, k_off)
                 v_m = _quantize_to_cache(v, v_sc, v_off)
             new_cache = _write_prefill_cache(
@@ -417,7 +453,9 @@ def attention(
             )
     else:
         # ---- single-token decode over the cache --------------------------
-        pos = cache["pos"]
+        # ``pos`` is per-row: every slot advances its own cursor, so a packed
+        # continuous-batching batch mixes requests at unrelated positions.
+        pos = jnp.broadcast_to(jnp.reshape(cache["pos"], (-1,)), (b,))  # (B,)
         slot = pos % cache_len if windowed else pos
         if quantized:
             k_sc, k_off = cache["k_scale"], cache["k_offset"]
@@ -427,22 +465,26 @@ def attention(
         else:
             k_m = k.astype(cache["k"].dtype)
             v_m = v.astype(cache["v"].dtype)
-        new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_m, slot, 1)
-        new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_m, slot, 1)
-        new_cache = dict(cache, k=new_k, v=new_v, pos=pos + 1)
+        row_write = jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(c, u, i, 0)
+        )
+        new_k = row_write(cache["k"], k_m, slot)
+        new_v = row_write(cache["v"], v_m, slot)
+        new_cache = dict(cache, k=new_k, v=new_v, pos=cache["pos"] + 1)
 
         t = cache_len
+        posc = pos[:, None]  # (B, 1)
         if windowed:
             # absolute position held by slot j after writing at `slot`
-            j = jnp.arange(t)
-            slot_abs = j + t * ((pos - j) // t)
+            j = jnp.arange(t)[None, :]
+            slot_abs = j + t * ((posc - j) // t)
             valid = slot_abs >= 0
-            rel_ok = slot_abs > pos - cfg.window_size  # ring holds exactly W
-            valid &= rel_ok & (slot_abs <= pos)
+            rel_ok = slot_abs > posc - cfg.window_size  # ring holds exactly W
+            valid &= rel_ok & (slot_abs <= posc)
         else:
-            valid = jnp.arange(t) <= pos
+            valid = jnp.arange(t)[None, :] <= posc
             if window:
-                valid &= jnp.arange(t) > pos - window
+                valid &= jnp.arange(t)[None, :] > posc - window
         expand = cfg.gqa_mode == "expand"
         if use_int:
             k_s = _gqa_expand(new_k, h) if expand else new_k
@@ -453,7 +495,7 @@ def attention(
                 src_k = _dequantize_from_cache(src_k, k_sc, k_off, x.dtype)
             scores = _scores_float(q, _gqa_expand(src_k, h) if expand else src_k)
         scores = scores / jnp.sqrt(jnp.float32(dh))
-        scores = jnp.where(valid[None, None, None, :], scores, _NEG_INF)
+        scores = jnp.where(valid[:, None, None, :], scores, _NEG_INF)
         probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
         if use_int:
             v_s = _gqa_expand(new_v, h) if expand else new_v
@@ -497,17 +539,18 @@ def init_mla(key, cfg: ArchConfig) -> dict:
 
 
 def init_mla_cache(batch: int, max_len: int, cfg: ArchConfig) -> dict:
+    """Latent cache with per-row ``pos`` / calibration (see init_kv_cache)."""
     m = cfg.mla
     q = cfg.quant
     base = {
         "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), jnp.bfloat16),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
     if q.enabled and q.kv_cache_bits in (4, 8):
         base.update(
             ckv=jnp.zeros((batch, max_len, m.kv_lora_rank), jnp.int8),
-            ckv_scale=jnp.ones((), jnp.float32),
-            ckv_offset=jnp.zeros((), jnp.float32),
+            ckv_scale=jnp.ones((batch,), jnp.float32),
+            ckv_offset=jnp.zeros((batch,), jnp.float32),
         )
     else:
         base["ckv"] = jnp.zeros((batch, max_len, m.kv_lora_rank), jnp.bfloat16)
@@ -555,37 +598,52 @@ def mla_attention(
 
     decode = cache is not None and s == 1
     if cache is not None:
-        pos = cache["pos"]
+        # per-row cursor: slots may sit at different sequence positions
+        pos = jnp.broadcast_to(jnp.reshape(cache["pos"], (-1,)), (b,))
         quantized = "ckv_scale" in cache
+        row_write = jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(c, u, i, 0)
+        )
         if quantized:
             if s > 1:
-                c32 = ckv.astype(jnp.float32)
-                off, hi = jnp.min(c32), jnp.max(c32)
-                sc = jnp.maximum((hi - off) / 255.0, 1e-8)
+                sc, off = _calibrate_rows(ckv)
             else:
-                sc, off = cache["ckv_scale"], cache["ckv_offset"]
+                sc = jnp.broadcast_to(jnp.reshape(cache["ckv_scale"], (-1,)), (b,))
+                off = jnp.broadcast_to(jnp.reshape(cache["ckv_offset"], (-1,)), (b,))
             c_m = _quantize_to_cache(ckv, sc, off)
+            if decode:
+                new_ckv = row_write(cache["ckv"], c_m, pos)
+                new_rope = row_write(cache["k_rope"], k_rope.astype(jnp.bfloat16), pos)
+            else:
+                # prefill contract: fresh/uniform cache rows (row-0 cursor)
+                new_ckv = jax.lax.dynamic_update_slice_in_dim(
+                    cache["ckv"], c_m, pos[0], 1
+                )
+                new_rope = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_rope"], k_rope.astype(jnp.bfloat16), pos[0], 1
+                )
             cache = dict(
                 cache,
-                ckv=jax.lax.dynamic_update_slice_in_dim(cache["ckv"], c_m, pos, 1),
+                ckv=new_ckv,
                 ckv_scale=sc,
                 ckv_offset=off,
-                k_rope=jax.lax.dynamic_update_slice_in_dim(
-                    cache["k_rope"], k_rope.astype(jnp.bfloat16), pos, 1
-                ),
-                pos=pos + s,
+                k_rope=new_rope,
+                pos=cache["pos"] + s,
             )
         else:
-            cache = dict(
-                cache,
-                ckv=jax.lax.dynamic_update_slice_in_dim(
-                    cache["ckv"], ckv.astype(cache["ckv"].dtype), pos, 1
-                ),
-                k_rope=jax.lax.dynamic_update_slice_in_dim(
-                    cache["k_rope"], k_rope.astype(jnp.bfloat16), pos, 1
-                ),
-                pos=pos + s,
-            )
+            c_u = ckv.astype(cache["ckv"].dtype)
+            r_u = k_rope.astype(jnp.bfloat16)
+            if decode:
+                new_ckv = row_write(cache["ckv"], c_u, pos)
+                new_rope = row_write(cache["k_rope"], r_u, pos)
+            else:
+                new_ckv = jax.lax.dynamic_update_slice_in_dim(
+                    cache["ckv"], c_u, pos[0], 1
+                )
+                new_rope = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_rope"], r_u, pos[0], 1
+                )
+            cache = dict(cache, ckv=new_ckv, k_rope=new_rope, pos=cache["pos"] + s)
 
     if decode:
         # ---- absorbed decode over the latent cache ----
@@ -628,7 +686,7 @@ def mla_attention(
             cache["k_rope"].astype(jnp.float32),
         )
         scores = (scores_lat + scores_rope) * scale
-        valid = jnp.arange(t)[None, :] < cache["pos"]
+        valid = jnp.arange(t)[None, :] < jnp.reshape(cache["pos"], (-1, 1))
         scores = jnp.where(valid[:, None, None, :], scores, _NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)  # (B,H,1,T)
         if quantized and quant.quantize_attention:
@@ -689,8 +747,8 @@ def _pv_int_latent(p_probs, ckv_m, ckv_scale, ckv_offset):
     x1 = (pm - 128.0).astype(jnp.int8).transpose(0, 2, 1, 3).reshape(b, s * h, t)
     a1, g1 = jnp.float32(1.0 / 255.0), jnp.float32(128.0 / 255.0)
     x2 = ckv_m.astype(jnp.int8)  # (b, t, r)
-    a2 = ckv_scale
-    g2 = ckv_offset + 128.0 * ckv_scale
+    a2 = _per_row(ckv_scale, 3)
+    g2 = _per_row(ckv_offset, 3) + 128.0 * a2
     xy = FA.default_int_matmul(x1, x2, 8, 8).astype(jnp.float32)
     row = jnp.sum(x1, axis=-1, dtype=jnp.int32)[..., None].astype(jnp.float32)
     col = jnp.sum(x2, axis=-2, dtype=jnp.int32)[..., None, :].astype(jnp.float32)

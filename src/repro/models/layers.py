@@ -114,10 +114,15 @@ def qlinear(
     if mode == "serve":
         k = x.shape[-1]
         wq = _serving_weight(p, k, quant)
-        xq = Q.quantize_activation(x.astype(jnp.float32), bits)
         lead = x.shape[:-1]
+        # per-token calibration on the flattened (M, K) view: each row gets
+        # its own grid, so co-batched serving slots stay numerically
+        # independent (batch invariance) — the epilogue broadcasts (M, 1)
+        xq = Q.quantize_activation(
+            x.astype(jnp.float32).reshape(-1, k), bits, per_channel_axis=0
+        )
         x2 = Q.QuantTensor(
-            mantissa=xq.mantissa.reshape(-1, k),
+            mantissa=xq.mantissa,
             scale=xq.scale,
             offset=xq.offset,
             bits=bits,

@@ -33,6 +33,9 @@ __all__ = [
     "loss_fn",
     "forward_logits",
     "init_cache",
+    "init_slot_cache",
+    "cache_insert",
+    "cache_reset",
     "prefill",
     "decode_step",
 ]
@@ -274,18 +277,75 @@ def init_cache(batch: int, max_len: int, cfg: ArchConfig) -> dict:
     return cache
 
 
+def init_slot_cache(max_len: int, cfg: ArchConfig) -> dict:
+    """A batch-1 cache suitable for ``cache_insert`` into a packed batch.
+
+    Continuous-batching serving prefills each admitted request into one of
+    these (exact prompt length, no padding) and then splices it into its
+    decode slot — the slot cache MUST share ``max_len`` with the packed
+    cache so every leaf lines up except the batch axis.
+    """
+    return init_cache(1, max_len, cfg)
+
+
+def _insert_leaf(dst, src, slot, axis: int):
+    return jax.lax.dynamic_update_slice_in_dim(dst, src.astype(dst.dtype), slot, axis)
+
+
+def cache_insert(cache: dict, slot_cache: dict, slot) -> dict:
+    """Splice a batch-1 ``slot_cache`` into row ``slot`` of a packed cache.
+
+    Every per-row cache leaf carries the batch axis at 0 (prefix layers,
+    encoder_out) or 1 (scanned ``period`` layers, whose leading axis is the
+    scan dim) — including the per-row ``pos`` cursors and quantization
+    affines, so the inserted request resumes at its own position with its
+    own calibration while other slots keep decoding.  ``slot`` may be a
+    Python int or a traced scalar (jit-safe).
+    """
+    stack, s_stack = cache["stack"], slot_cache["stack"]
+    prefix = jax.tree.map(
+        lambda d, s: _insert_leaf(d, s, slot, 0), stack["prefix"], s_stack["prefix"]
+    )
+    period = jax.tree.map(
+        lambda d, s: _insert_leaf(d, s, slot, 1), stack["period"], s_stack["period"]
+    )
+    out = dict(cache, stack=dict(stack, prefix=prefix, period=period))
+    if "encoder_out" in cache:
+        out["encoder_out"] = _insert_leaf(
+            cache["encoder_out"], slot_cache["encoder_out"], slot, 0
+        )
+    return out
+
+
+def cache_reset(cache: dict, slot, cfg: ArchConfig, max_len: int) -> dict:
+    """Zero row ``slot`` of a packed cache (freed when a request finishes):
+    position cursor back to 0, calibration affines back to identity."""
+    return cache_insert(cache, init_slot_cache(max_len, cfg), slot)
+
+
 def prefill(
     params: dict,
     tokens: jax.Array,
     cfg: ArchConfig,
     cache: dict,
     frontend: Optional[jax.Array] = None,
+    length: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, dict]:
     """Process the prompt; returns (last-position logits (B,V), cache).
 
     Runs under the "prefill" autotune phase: its QMMs see M = batch x
     prompt, orders of magnitude larger than decode's M = batch, so the
     measured backend choice is tuned (and cached) independently.
+
+    ``length``: optional (B,) actual prompt lengths for RIGHT-padded
+    batches (bucketed prefill).  Logits are taken at ``length - 1`` per
+    row and cache cursors are rewound to ``length`` so decode overwrites
+    the pad region.  Pads are causally invisible to real tokens, but this
+    is exact only for float full-attention caches: quantized-KV
+    calibration sees the pads, windowed rings evict real tokens once the
+    padded length reaches the window, and SSM recurrences integrate pad
+    steps.  Exact-length prefill (``length=None``, no padding) is the
+    default and what the continuous-batching engine uses.
     """
     with dispatch.tuning_phase("prefill"):
         b, s = tokens.shape
@@ -299,7 +359,14 @@ def prefill(
         x, new_stack, _ = T.stack_apply(
             params["stack"], x, cfg, "serve", positions, cache["stack"], encoder_out
         )
-        x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        if length is None:
+            x_last = x[:, -1:]
+        else:
+            rows = jnp.asarray(length, jnp.int32).reshape(-1)
+            idx = jnp.broadcast_to((rows - 1)[:, None, None], (b, 1, x.shape[-1]))
+            x_last = jnp.take_along_axis(x, idx, axis=1)
+            new_stack = _set_stack_pos(new_stack, rows)
+        x = L.rmsnorm(params["final_norm"], x_last, cfg.norm_eps)
         logits = L.unembed(params, x, cfg.tie_embeddings)[:, 0]
         return logits, dict(cache, stack=new_stack)
 
@@ -315,8 +382,8 @@ def decode_step(
     Runs under the "decode" autotune phase (see ``prefill``)."""
     with dispatch.tuning_phase("decode"):
         b = tokens.shape[0]
-        pos_scalar = _cache_pos(cache["stack"], cfg)
-        positions = jnp.broadcast_to(pos_scalar[None, None], (b, 1))
+        pos_rows = jnp.reshape(_cache_pos(cache["stack"], cfg), (-1,))
+        positions = jnp.broadcast_to(pos_rows[:, None], (b, 1))
         x = L.embed(params, tokens[:, None], cfg.d_model)
         if cfg.pos_embedding == "learned":
             pe = jnp.take(params["pos_embedding"], positions, axis=0)
@@ -332,6 +399,23 @@ def decode_step(
 
 
 def _cache_pos(stack_cache: dict, cfg: ArchConfig):
+    """Per-row (B,) position cursors of the first layer's cache."""
     if stack_cache["prefix"]:
         return stack_cache["prefix"][0]["pos"]
     return stack_cache["period"][0]["pos"][0]
+
+
+def _set_stack_pos(stack_cache: dict, rows: jax.Array) -> dict:
+    """Overwrite every layer's ``pos`` cursor with per-row values (B,)."""
+
+    def fix(c):
+        if isinstance(c, dict) and "pos" in c:
+            pos = jnp.broadcast_to(rows, c["pos"].shape).astype(c["pos"].dtype)
+            return dict(c, pos=pos)
+        return c
+
+    return dict(
+        stack_cache,
+        prefix=[fix(c) for c in stack_cache["prefix"]],
+        period=[fix(c) for c in stack_cache["period"]],
+    )

@@ -77,7 +77,15 @@ def expert_qlinear(p: dict, x: jax.Array, quant: QuantConfig, mode: str, k: int)
         packed_axis=1,
         length=k,
     )
-    xq = Q.quantize_activation(x.astype(jnp.float32), quant.act_bits)
+    # per-token (E, C, 1) calibration: each routed token keeps its own grid
+    # so the quantization of one request's tokens never depends on which
+    # other tokens share the expert buffer (capacity dropping still makes
+    # MoE routing itself batch-dependent — this only fixes the numerics)
+    x32 = x.astype(jnp.float32)
+    lo = jnp.min(jax.lax.stop_gradient(x32), axis=-1, keepdims=True)
+    hi = jnp.max(jax.lax.stop_gradient(x32), axis=-1, keepdims=True)
+    sc = jnp.maximum((hi - lo) / float(2**quant.act_bits - 1), 1e-8)
+    xq = Q.quantize_activation(x32, quant.act_bits, scale=sc, offset=lo)
     out = FA.qmm_flow(xq, wq, w_colsum=p["w_colsum"])  # colsum (E, N)
     return out.astype(x.dtype)
 

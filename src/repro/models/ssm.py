@@ -67,7 +67,7 @@ def init_ssd_state(batch: int, cfg: ArchConfig) -> dict:
     return {
         "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
         "conv": jnp.zeros((batch, s.d_conv - 1, di + 2 * gz), jnp.float32),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),  # per-row cursor (serving slots)
     }
 
 
@@ -173,13 +173,16 @@ def ssd_mixer(
     zxbcdt = L.qlinear(p["in_proj"], x, cfg.quant, mode, name="ssm.in_proj")
     z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * gz], axis=-1)
     # xbc: (B, S, di + 2*gz) goes through the short conv
+    # conv window is STORED f32 (init_cache dtype) but COMPUTED in the
+    # activation dtype, like the rglru path — so the conv numerics don't
+    # depend on whether the state came from prefill or cache_insert.
     if state is not None and s == 1:
-        conv_in = jnp.concatenate([state["conv"], xbc], axis=1)
-        new_conv = conv_in[:, 1:]
+        conv_in = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)
+        new_conv = conv_in[:, 1:].astype(jnp.float32)
     else:
         pad = jnp.zeros((b, s_cfg.d_conv - 1, xbc.shape[-1]), xbc.dtype)
         conv_in = jnp.concatenate([pad, xbc], axis=1)
-        new_conv = conv_in[:, -(s_cfg.d_conv - 1) :]
+        new_conv = conv_in[:, -(s_cfg.d_conv - 1) :].astype(jnp.float32)
     # depthwise causal conv via windowed sum
     w = p["conv_w"].astype(conv_in.dtype)  # (d_conv, C)
     conv_out = sum(conv_in[:, i : i + s] * w[i] for i in range(s_cfg.d_conv))
@@ -254,7 +257,7 @@ def init_rglru_state(batch: int, cfg: ArchConfig) -> dict:
     return {
         "h": jnp.zeros((batch, di), jnp.float32),
         "conv": jnp.zeros((batch, 3, di), jnp.float32),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),  # per-row cursor (serving slots)
     }
 
 

@@ -1,4 +1,4 @@
-"""Batched serving engine: slot-based continuous batching over the binary
+"""Continuous-batching serving engine: slot-managed decode over the binary
 Transformer datapath (what BETA does at the edge, scaled to a pod).
 
 Components:
@@ -7,10 +7,21 @@ Components:
   serving params + quantized KV caches (sharding per runtime.sharding).
   These are the functions the ``prefill_*`` / ``decode_*`` / ``long_*``
   dry-run cells lower.
-* ``ServeEngine`` — host-side request loop: fixed batch slots, each slot
-  independently prefilled/reset (continuous batching without dynamic
-  shapes: a finished slot is re-prefilled for the next queued request while
-  other slots keep decoding).  Greedy or temperature sampling.
+* ``ServeEngine`` — host-side continuous-batching loop: an admission queue
+  feeds a fixed-size packed decode batch.  Each slot carries its own request
+  state (cache row with per-row position cursor + calibration affines,
+  remaining-token budget, per-request RNG).  A newly admitted request is
+  prefilled at its EXACT prompt length (batch 1, no padding) and spliced
+  into a free slot with ``model_zoo.cache_insert`` while the other slots
+  keep decoding; a finished slot is reset and immediately refilled from the
+  queue — no wave ever stalls on its longest request.
+* ``serve_sequential`` — the naive one-request-at-a-time oracle the
+  differential tests compare against.
+
+Numerical contract (what the differential test pins down): serve-mode
+activation quantization is per-token and cache state is per-row, so a
+request's tokens are bit-identical no matter which requests share the
+batch — continuous batching is a pure scheduling optimization.
 
 The decode step is the latency-critical path: one token per call against a
 cache of ``max_len`` — its roofline is memory-bound, which is exactly where
@@ -28,7 +39,8 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Callable, List, Optional
+import time
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +52,13 @@ from repro.core import dispatch
 from repro.models import model_zoo as Z
 from repro.runtime import sharding as SH
 
-__all__ = ["make_prefill", "make_decode_step", "ServeEngine", "Request"]
+__all__ = [
+    "make_prefill",
+    "make_decode_step",
+    "ServeEngine",
+    "Request",
+    "serve_sequential",
+]
 
 
 def serving_params_shardings(cfg: ArchConfig, mesh: Mesh):
@@ -105,14 +123,58 @@ class Request:
     prompt: np.ndarray  # (prompt_len,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
+    # open-loop traffic: seconds (from run start) before the request exists
+    arrival_s: float = 0.0
+    # optional per-request streaming callback: on_token(token_id)
+    on_token: Optional[Callable[[int], None]] = None
     # filled by the engine:
     output: Optional[List[int]] = None
+    rid: Optional[int] = None  # engine-assigned request id (RNG key)
+    t_admitted: Optional[float] = None  # seconds from run start
+    t_first_token: Optional[float] = None
+    t_finished: Optional[float] = None
+    token_times: Optional[List[float]] = None  # one stamp per output token
+
+
+def _sample(logits: np.ndarray, temperature: float, rng: np.random.Generator) -> int:
+    """Shared by the engine and the sequential oracle: greedy at T<=0,
+    softmax sampling otherwise, against the request's OWN rng stream."""
+    if temperature <= 0:
+        return int(np.argmax(logits))
+    z = logits.astype(np.float64) / temperature
+    z = z - z.max()
+    p = np.exp(z)
+    p = p / p.sum()
+    return int(rng.choice(len(p), p=p))
+
+
+def _request_rng(seed: int, rid: int) -> np.random.Generator:
+    """Per-request stream keyed on (engine seed, request id): sampling is
+    independent of which slot served the request and of its co-batch."""
+    return np.random.default_rng([seed, rid])
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    remaining: int
+    rng: np.random.Generator
 
 
 class ServeEngine:
-    """Fixed-slot batched serving. Single-host driver; the jitted steps are
-    SPMD so the same driver scales to a pod (per-slot prefill batches of 1
-    would be padded to the slot batch on real deployments)."""
+    """Slot-managed continuous batching.  Single-host driver; the jitted
+    steps are SPMD so the same driver scales to a pod (per-slot prefill
+    batches of 1 would be padded to the slot batch on real deployments).
+
+    Scheduling loop per tick: (1) admit — while a slot is free and the
+    head of the arrival-ordered queue has arrived, prefill it exactly
+    (batch 1, its own prompt length) and ``cache_insert`` it into the free
+    slot; (2) decode — one packed ``decode_step`` over all slots; active
+    slots sample/stream their token, slots whose budget hits zero are
+    ``cache_reset`` and freed for the next admission.  The event trace of
+    the last ``run`` is kept on ``last_events`` for the slot-invariant
+    property tests.
+    """
 
     def __init__(
         self,
@@ -129,66 +191,167 @@ class ServeEngine:
         process skips backend re-timing entirely) and written back after
         each ``run`` so the next process inherits fresh verdicts.  Only
         meaningful when the arch's quant config uses ``backend="auto"``."""
+        if cfg.encoder is not None and cfg.encoder.n_layers:
+            raise NotImplementedError(
+                "continuous batching drives decoder-only stacks; "
+                "encoder-frontend archs go through make_prefill/make_decode_step"
+            )
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
+        self._next_rid = 0
         mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
         self.mesh = mesh
-        self._decode = None  # built lazily per batch size
+        self.last_events: List[Dict] = []
         self.autotune_cache_path = autotune_cache_path
         if autotune_cache_path and os.path.exists(autotune_cache_path):
             dispatch.get_cache().load(autotune_cache_path)
+        cfg_ = cfg
 
-    def _sample(self, logits: np.ndarray, temperature: float) -> int:
-        if temperature <= 0:
-            return int(np.argmax(logits))
-        z = logits / temperature
-        z = z - z.max()
-        p = np.exp(z) / np.exp(z).sum()
-        return int(self.rng.choice(len(p), p=p))
+        def _decode(params, tokens, cache):
+            return Z.decode_step(params, tokens, cfg_, cache)
+
+        # fixed shapes: one compile per engine
+        self._decode_fn = jax.jit(_decode)
+
+    # -- internals ----------------------------------------------------------
+
+    def _event(self, kind: str, t: float, **kw) -> None:
+        self.last_events.append(dict(kind=kind, t=t, **kw))
+
+    def _admit(self, req: Request, slot: int, cache: dict, now: float):
+        """Exact-length batch-1 prefill + splice into ``slot``."""
+        req.t_admitted = now
+        self._event("admit", now, rid=req.rid, slot=slot, prompt_len=len(req.prompt))
+        slot_cache = Z.init_slot_cache(self.max_len, self.cfg)
+        tokens = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
+        logits, slot_cache = Z.prefill(self.params, tokens, self.cfg, slot_cache)
+        self._event("prefill", time.perf_counter() - self._t0, rid=req.rid, slot=slot)
+        cache = Z.cache_insert(cache, slot_cache, slot)
+        self._event("insert", time.perf_counter() - self._t0, rid=req.rid, slot=slot)
+        return np.asarray(logits)[0], cache
+
+    def _emit(self, req: Request, token: int, now: float) -> None:
+        req.output.append(token)
+        req.token_times.append(now)
+        if req.t_first_token is None:
+            req.t_first_token = now
+        if req.on_token is not None:
+            req.on_token(token)
+
+    # -- public API ---------------------------------------------------------
 
     def run(self, requests: List[Request]) -> List[Request]:
-        """Serve a queue of requests through ``slots`` parallel lanes."""
+        """Serve a queue of requests; returns them in submission order.
+
+        Requests with ``arrival_s > 0`` (open-loop traffic) are held back
+        until their arrival time relative to the start of the call.
+        """
         cfg = self.cfg
-        queue = list(requests)
-        # process in waves of `slots`; each wave shares a prefill length
-        done: List[Request] = []
-        while queue:
-            wave = queue[: self.slots]
-            queue = queue[len(wave) :]
-            plen = max(len(r.prompt) for r in wave)
-            toks = np.zeros((len(wave), plen), np.int32)
-            for i, r in enumerate(wave):
-                toks[i, plen - len(r.prompt) :] = r.prompt  # left-pad
-            cache = Z.init_cache(len(wave), self.max_len, cfg)
-            logits, cache = Z.prefill(self.params, jnp.asarray(toks), cfg, cache)
+        for r in requests:
+            plen = len(r.prompt)
+            if plen < 1 or r.max_new_tokens < 1:
+                raise ValueError("request needs a non-empty prompt and >= 1 new token")
+            if plen + r.max_new_tokens > self.max_len:
+                raise ValueError(
+                    f"prompt_len({plen}) + max_new_tokens({r.max_new_tokens}) "
+                    f"exceeds engine max_len({self.max_len})"
+                )
+        for r in requests:
+            r.rid = self._next_rid
+            self._next_rid += 1
+            r.output = []
+            r.token_times = []
+            r.t_admitted = r.t_first_token = r.t_finished = None
+        self.last_events = []
+        self._t0 = time.perf_counter()
+        clock = lambda: time.perf_counter() - self._t0
+
+        queue = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        cache = Z.init_cache(self.slots, self.max_len, cfg)
+        slots: List[Optional[_Slot]] = [None] * self.slots
+        cur = np.zeros((self.slots,), np.int32)  # next decode input per slot
+
+        def finish(i: int, now: float) -> None:
+            nonlocal cache
+            st = slots[i]
+            st.req.t_finished = now
+            self._event("finish", now, rid=st.req.rid, slot=i)
+            cache = Z.cache_reset(cache, i, cfg, self.max_len)
+            self._event("reset", clock(), rid=st.req.rid, slot=i)
+            slots[i] = None
+
+        while queue or any(s is not None for s in slots):
+            # ---- admission: fill free slots from arrived requests --------
+            while queue and queue[0].arrival_s <= clock() and None in slots:
+                req = queue.pop(0)
+                i = slots.index(None)
+                logits, cache = self._admit(req, i, cache, clock())
+                st = _Slot(req, req.max_new_tokens, _request_rng(self.seed, req.rid))
+                tok = _sample(logits, req.temperature, st.rng)
+                self._emit(req, tok, clock())
+                st.remaining -= 1
+                slots[i] = st
+                cur[i] = tok
+                if st.remaining == 0:
+                    finish(i, clock())
+            if all(s is None for s in slots):
+                if queue:  # open-loop gap: idle until the next arrival
+                    time.sleep(max(0.0, queue[0].arrival_s - clock()))
+                continue
+
+            # ---- one packed decode tick over every slot ------------------
+            logits, cache = self._decode_fn(self.params, jnp.asarray(cur), cache)
             logits = np.asarray(logits)
-            cur = np.array(
-                [self._sample(logits[i], r.temperature) for i, r in enumerate(wave)],
-                np.int32,
+            now = clock()
+            self._event(
+                "decode_tick",
+                now,
+                rids=[s.req.rid if s else None for s in slots],
             )
-            outs = [[int(c)] for c in cur]
-            steps = max(r.max_new_tokens for r in wave) - 1
-            for _ in range(max(0, steps)):
-                logits, cache = Z.decode_step(
-                    self.params, jnp.asarray(cur), cfg, cache
-                )
-                logits = np.asarray(logits)
-                cur = np.array(
-                    [
-                        self._sample(logits[i], r.temperature)
-                        for i, r in enumerate(wave)
-                    ],
-                    np.int32,
-                )
-                for i, r in enumerate(wave):
-                    if len(outs[i]) < r.max_new_tokens:
-                        outs[i].append(int(cur[i]))
-            for r, o in zip(wave, outs):
-                r.output = o[: r.max_new_tokens]
-                done.append(r)
+            for i, st in enumerate(slots):
+                if st is None:
+                    continue
+                tok = _sample(logits[i], st.req.temperature, st.rng)
+                self._emit(st.req, tok, now)
+                st.remaining -= 1
+                cur[i] = tok
+                if st.remaining == 0:
+                    finish(i, clock())
+
         if self.autotune_cache_path:
             dispatch.get_cache().save(self.autotune_cache_path)
-        return done
+        return list(requests)
+
+
+def serve_sequential(
+    cfg: ArchConfig,
+    params,
+    requests: List[Request],
+    *,
+    max_len: int = 256,
+    seed: int = 0,
+) -> List[Request]:
+    """Naive one-request-at-a-time oracle: batch 1, no slot machinery, no
+    co-batching — the reference the differential tests hold ``ServeEngine``
+    to, token for token.  Shares ``_sample`` and the per-request RNG keying
+    with the engine so sampling (not just greedy argmax) is comparable."""
+    for rid, r in enumerate(requests):
+        if len(r.prompt) + r.max_new_tokens > max_len:
+            raise ValueError("request exceeds max_len")
+        r.rid = rid
+        rng = _request_rng(seed, rid)
+        cache = Z.init_cache(1, max_len, cfg)
+        tokens = jnp.asarray(np.asarray(r.prompt, np.int32)[None, :])
+        logits, cache = Z.prefill(params, tokens, cfg, cache)
+        tok = _sample(np.asarray(logits)[0], r.temperature, rng)
+        r.output = [tok]
+        while len(r.output) < r.max_new_tokens:
+            logits, cache = Z.decode_step(
+                params, jnp.asarray([tok], np.int32), cfg, cache
+            )
+            tok = _sample(np.asarray(logits)[0], r.temperature, rng)
+            r.output.append(tok)
+    return list(requests)

@@ -1,0 +1,145 @@
+"""Synthetic open-loop serving traffic + the BENCH_serve.json schema.
+
+Open-loop means arrivals are independent of service: a Poisson process
+(exponential inter-arrival gaps at ``rate_rps``) stamps each request with an
+``arrival_s`` the engine honors regardless of how fast it is draining —
+queueing delay shows up in the latency percentiles instead of silently
+throttling the offered load (closed-loop generators hide saturation).
+
+Everything is seeded: the same ``TrafficConfig`` always produces the same
+request set (prompts, lengths, arrival times), which is what lets
+``BENCH_serve.json`` act as a perf-trajectory artifact — later PRs rerun the
+identical workload and diff rps/p50/p99.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.runtime.serve_loop import Request
+
+__all__ = [
+    "TrafficConfig",
+    "generate_requests",
+    "summarize_bench",
+    "validate_bench",
+    "save_bench",
+    "load_bench",
+    "BENCH_SCHEMA_VERSION",
+    "BENCH_REQUIRED_KEYS",
+]
+
+BENCH_SCHEMA_VERSION = 1
+# contract checked by tests + the CI smoke cell
+BENCH_REQUIRED_KEYS = ("rps", "p50_ms", "p99_ms", "config")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    """Open-loop workload description (all distributions seeded)."""
+
+    n_requests: int = 16
+    rate_rps: float = 8.0  # Poisson arrival rate; <=0 -> all arrive at t=0
+    prompt_len: Tuple[int, int] = (4, 12)  # inclusive uniform range
+    new_tokens: Tuple[int, int] = (4, 16)  # inclusive uniform range
+    temperature: float = 0.0
+    seed: int = 0
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["prompt_len"] = list(self.prompt_len)
+        d["new_tokens"] = list(self.new_tokens)
+        return d
+
+
+def generate_requests(tc: TrafficConfig, vocab_size: int) -> List[Request]:
+    """Materialize the workload: deterministic in (tc, vocab_size)."""
+    rng = np.random.default_rng(tc.seed)
+    if tc.rate_rps > 0:
+        gaps = rng.exponential(1.0 / tc.rate_rps, size=tc.n_requests)
+        arrivals = np.cumsum(gaps)
+    else:
+        arrivals = np.zeros(tc.n_requests)
+    out: List[Request] = []
+    for i in range(tc.n_requests):
+        plen = int(rng.integers(tc.prompt_len[0], tc.prompt_len[1] + 1))
+        nnew = int(rng.integers(tc.new_tokens[0], tc.new_tokens[1] + 1))
+        prompt = rng.integers(0, vocab_size, size=(plen,)).astype(np.int32)
+        out.append(
+            Request(
+                prompt=prompt,
+                max_new_tokens=nnew,
+                temperature=tc.temperature,
+                arrival_s=float(arrivals[i]),
+            )
+        )
+    return out
+
+
+def _percentile_ms(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q) * 1e3) if xs else 0.0
+
+
+def summarize_bench(
+    requests: List[Request], wall_s: float, config: Optional[Dict] = None
+) -> Dict:
+    """Condense a served request set into the BENCH_serve.json record.
+
+    Token latency distribution = per-request time-to-first-token (from
+    arrival, so queueing delay counts) plus every inter-token gap; ``rps``
+    is completed requests over the wall clock of the whole run.
+    """
+    lats: List[float] = []
+    ttfts: List[float] = []
+    n_tokens = 0
+    for r in requests:
+        if not r.token_times:
+            continue
+        n_tokens += len(r.token_times)
+        ttft = r.token_times[0] - r.arrival_s
+        ttfts.append(ttft)
+        lats.append(ttft)
+        lats.extend(np.diff(np.asarray(r.token_times)).tolist())
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "config": dict(config or {}),
+        "rps": (len(requests) / wall_s) if wall_s > 0 else 0.0,
+        "p50_ms": _percentile_ms(lats, 50),
+        "p99_ms": _percentile_ms(lats, 99),
+        "ttft_p50_ms": _percentile_ms(ttfts, 50),
+        "ttft_p99_ms": _percentile_ms(ttfts, 99),
+        "tokens_per_s": (n_tokens / wall_s) if wall_s > 0 else 0.0,
+        "n_requests": len(requests),
+        "n_tokens": n_tokens,
+        "wall_s": wall_s,
+    }
+
+
+def validate_bench(doc: Dict) -> Dict:
+    missing = [k for k in BENCH_REQUIRED_KEYS if k not in doc]
+    if missing:
+        raise ValueError(f"BENCH_serve.json missing keys: {missing}")
+    for k in ("rps", "p50_ms", "p99_ms"):
+        if not isinstance(doc[k], (int, float)):
+            raise ValueError(f"BENCH_serve.json key {k!r} must be numeric")
+    if not isinstance(doc["config"], dict):
+        raise ValueError("BENCH_serve.json 'config' must be an object")
+    return doc
+
+
+def save_bench(path: str, doc: Dict) -> None:
+    validate_bench(doc)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def load_bench(path: str) -> Dict:
+    with open(path) as f:
+        doc = json.load(f)
+    validate_bench(doc)
+    return doc

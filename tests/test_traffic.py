@@ -1,0 +1,90 @@
+"""Traffic generator determinism + BENCH_serve.json schema contract."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.runtime.serve_loop import Request
+from repro.runtime.traffic import (
+    BENCH_REQUIRED_KEYS,
+    TrafficConfig,
+    generate_requests,
+    load_bench,
+    save_bench,
+    summarize_bench,
+    validate_bench,
+)
+
+VOCAB = 256
+
+
+def test_generator_is_deterministic():
+    tc = TrafficConfig(n_requests=12, rate_rps=5.0, seed=123)
+    a = generate_requests(tc, VOCAB)
+    b = generate_requests(tc, VOCAB)
+    assert len(a) == len(b) == 12
+    for ra, rb in zip(a, b):
+        assert np.array_equal(ra.prompt, rb.prompt)
+        assert ra.max_new_tokens == rb.max_new_tokens
+        assert ra.arrival_s == rb.arrival_s
+    c = generate_requests(TrafficConfig(n_requests=12, rate_rps=5.0, seed=124), VOCAB)
+    assert any(not np.array_equal(ra.prompt, rc.prompt) for ra, rc in zip(a, c))
+
+
+def test_generator_respects_config():
+    tc = TrafficConfig(
+        n_requests=50, rate_rps=20.0, prompt_len=(3, 7), new_tokens=(2, 5), seed=0
+    )
+    reqs = generate_requests(tc, VOCAB)
+    assert all(3 <= len(r.prompt) <= 7 for r in reqs)
+    assert all(2 <= r.max_new_tokens <= 5 for r in reqs)
+    assert all(0 <= t < VOCAB for r in reqs for t in r.prompt.tolist())
+    arr = [r.arrival_s for r in reqs]
+    assert arr == sorted(arr) and arr[0] > 0  # Poisson arrivals, increasing
+    # rate <= 0 -> everything arrives at t=0 (closed burst)
+    burst = generate_requests(TrafficConfig(n_requests=5, rate_rps=0.0), VOCAB)
+    assert all(r.arrival_s == 0.0 for r in burst)
+
+
+def _served_requests():
+    """A hand-built served set with known timing."""
+    reqs = []
+    for i in range(4):
+        r = Request(prompt=np.zeros((4,), np.int32), max_new_tokens=3, arrival_s=0.1 * i)
+        r.output = [1, 2, 3]
+        base = 0.1 * i + 0.05
+        r.token_times = [base, base + 0.01, base + 0.02]
+        reqs.append(r)
+    return reqs
+
+
+def test_bench_summary_schema_and_roundtrip(tmp_path):
+    summary = summarize_bench(_served_requests(), wall_s=2.0, config={"arch": "x"})
+    for k in BENCH_REQUIRED_KEYS:
+        assert k in summary
+    assert summary["rps"] == pytest.approx(2.0)  # 4 requests / 2 s
+    assert summary["n_tokens"] == 12
+    assert summary["p50_ms"] > 0 and summary["p99_ms"] >= summary["p50_ms"]
+    assert summary["ttft_p50_ms"] == pytest.approx(50.0)
+
+    path = tmp_path / "BENCH_serve.json"
+    save_bench(str(path), summary)
+    doc = json.loads(path.read_text())  # round-trips through plain json
+    assert doc["config"] == {"arch": "x"}
+    assert load_bench(str(path)) == doc
+
+
+def test_bench_validation_rejects_bad_docs():
+    with pytest.raises(ValueError, match="missing"):
+        validate_bench({"rps": 1.0})
+    with pytest.raises(ValueError, match="numeric"):
+        validate_bench({"rps": "fast", "p50_ms": 1, "p99_ms": 2, "config": {}})
+    with pytest.raises(ValueError, match="object"):
+        validate_bench({"rps": 1, "p50_ms": 1, "p99_ms": 2, "config": "x"})
+
+
+def test_traffic_config_json_serializable():
+    tc = TrafficConfig(prompt_len=(2, 9))
+    d = tc.to_dict()
+    assert json.loads(json.dumps(d)) == d
