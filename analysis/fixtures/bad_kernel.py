@@ -1,0 +1,49 @@
+"""Deliberately-broken toy kernel: every jaxpr invariant must fire on it.
+
+Loaded by path (never on sys.path) from the verifier self-test and the unit
+tests.  Each function reproduces one class of datapath bug the verifier
+exists to catch; if a refactor of the taint walker stops detecting any of
+them, ``python -m repro.analysis --self-test`` fails.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def leak_packed_to_float(packed):
+    """INV-PACKED-FLOAT: treats uint32 bit-plane *storage* as numbers."""
+    return packed.astype(jnp.float32) * 2.0
+
+
+def accumulate_in_bf16(a_packed, b_packed):
+    """INV-ACCUM-LOWFP: popcount accumulator rounded through bfloat16."""
+    counts = lax.population_count(a_packed & b_packed)
+    return jnp.sum(counts.astype(jnp.bfloat16), axis=-1)
+
+
+def int_dot_low_precision(a, b):
+    """INV-INT-DOT: int8 x int8 dot without preferred_element_type=int32
+    accumulates in int8 and wraps after 128 / 127."""
+    return jnp.dot(a, b)
+
+
+def init_cache(batch, seq, d):
+    return {
+        "k": jnp.zeros((batch, seq, d), jnp.float32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def drifting_step(cache, x):
+    """INV-CACHE-DTYPE: the PR 6 bug class — a step that writes the slot
+    back in bfloat16 when init_cache allocated float32."""
+    return dict(cache, k=cache["k"].astype(jnp.bfloat16))
+
+
+def growing_step(cache, x):
+    """INV-CACHE-SHAPE: appends instead of splicing into fixed capacity."""
+    return dict(
+        cache,
+        k=jnp.concatenate([cache["k"], x[:, None, :]], axis=1),
+        pos=cache["pos"] + 1,
+    )

@@ -1,0 +1,49 @@
+"""Known-bad lint fixture: every rule must fire at least once on this file.
+
+Never imported — parsed only.  Lives outside ``src/`` so the production
+lint sweep never sees it.  tests/test_analysis_lint.py and the CLI
+``--self-test`` assert each rule id below is detected.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bad_rng001():
+    np.random.seed(0)  # RNG001: global process-wide RNG state
+    return np.random.randn(4)  # RNG001
+
+
+def bad_rng002():
+    key = jax.random.PRNGKey(42)  # RNG002: hardcoded seed, not eval_shape
+    return jax.random.normal(key, (4,))
+
+
+@jax.jit
+def bad_time001(x):
+    t0 = time.time()  # TIME001: baked in as a constant at trace time
+    return x + t0
+
+
+def bad_trace001(x):
+    if jnp.any(x > 0):  # TRACE001: Python branch on a traced reduction
+        return x
+    while jnp.max(x) < 1.0:  # TRACE001
+        x = x * 2
+    return x
+
+
+def bad_dtype001(x):
+    return x.astype(jnp.bfloat16)  # DTYPE001: hardcoded low-precision literal
+
+
+def bad_mut001(x, acc=[]):  # MUT001: mutable default
+    acc.append(x)
+    return acc
+
+
+def bad_mut001_kw(x, *, table={}):  # MUT001 (kw-only default)
+    return table.get(x)

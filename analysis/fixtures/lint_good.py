@@ -1,0 +1,45 @@
+"""Known-good lint fixture: the clean counterpart of every lint_bad.py hit.
+
+The lint pass must report ZERO findings here — each function shows the
+idiom the rule's fix hint prescribes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def good_rng001(seed):
+    rng = np.random.default_rng(seed)  # explicit Generator, no global state
+    return rng.standard_normal(4)
+
+
+def good_rng002(key):
+    # the key is threaded in from the caller, never hardcoded here
+    return jax.random.normal(key, (4,))
+
+
+def good_rng002_eval_shape(fn):
+    # shape-only trace: the key's value is never consumed (exempt)
+    return jax.eval_shape(fn, jax.random.PRNGKey(0))
+
+
+@jax.jit
+def good_time001(x, t0):
+    # callers own the clock; the traced function takes the timestamp as data
+    return x + t0
+
+
+def good_trace001(x):
+    return jnp.where(jnp.any(x > 0), x, x * 2)  # traced select, no Python branch
+
+
+def good_dtype001(x, cache):
+    return x.astype(cache["k"].dtype)  # dtype derives from the target leaf
+
+
+def good_mut001(x, acc=None):
+    if acc is None:
+        acc = []
+    acc.append(x)
+    return acc

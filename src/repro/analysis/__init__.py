@@ -1,0 +1,28 @@
+"""Static analysis for the quantized engine: jaxpr invariant verifier
+(Pass 1) + AST lint (Pass 2).  ``python -m repro.analysis`` runs both; see
+docs/static-analysis.md for the rule catalog and allowlist format."""
+
+from repro.analysis.findings import AllowEntry, Allowlist, Finding
+from repro.analysis.lint import RULES, lint_file, lint_paths, lint_source
+from repro.analysis.verifier import (
+    check_cache_contract,
+    check_function,
+    verify_arch,
+    verify_archs,
+    verify_backends,
+)
+
+__all__ = [
+    "AllowEntry",
+    "Allowlist",
+    "Finding",
+    "RULES",
+    "lint_source",
+    "lint_file",
+    "lint_paths",
+    "check_function",
+    "check_cache_contract",
+    "verify_arch",
+    "verify_archs",
+    "verify_backends",
+]

@@ -1,0 +1,341 @@
+"""Pass 2 — AST lint over library code for JAX/Pallas pitfalls.
+
+Purely syntactic (``ast`` module, no imports of the scanned code), so it can
+run on any Python source — including the known-bad fixture snippets the test
+suite seeds.  Each rule yields :class:`~repro.analysis.findings.Finding`
+objects; the CLI filters them through the checked-in allowlist.
+
+Rule catalog (docs/static-analysis.md has the full rationale):
+
+  RNG001  global NumPy RNG call (``np.random.seed/rand/...``) in library code
+  RNG002  ``jax.random.PRNGKey(<literal>)`` outside ``jax.eval_shape``
+  TIME001 wall-clock call inside a jit-decorated function (baked at trace)
+  TRACE001 Python ``if``/``while`` on a traced-value reduction (``jnp.any``...)
+  DTYPE001 hardcoded ``jnp.bfloat16``/``jnp.float16`` literal (serve/cache
+           dtypes must derive from the initialized leaf; the PR 6 drift bug)
+  MUT001  mutable default argument
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterator, List, Optional, Sequence
+
+from repro.analysis.findings import Finding
+
+__all__ = ["RULES", "lint_source", "lint_file", "lint_paths"]
+
+
+# ---------------------------------------------------------------------------
+# AST helpers
+# ---------------------------------------------------------------------------
+
+
+def _attach_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._lint_parent = node  # type: ignore[attr-defined]
+
+
+def _ancestors(node: ast.AST) -> Iterator[ast.AST]:
+    cur = getattr(node, "_lint_parent", None)
+    while cur is not None:
+        yield cur
+        cur = getattr(cur, "_lint_parent", None)
+
+
+def _symbol(node: ast.AST) -> str:
+    """Dotted chain of enclosing function names ("outer.inner"), or
+    "<module>" at module level.  Line-number-free, so allowlist entries
+    survive unrelated edits."""
+    names = [
+        a.name
+        for a in _ancestors(node)
+        if isinstance(a, (ast.FunctionDef, ast.AsyncFunctionDef))
+    ]
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        names.insert(0, node.name)
+    return ".".join(reversed(names)) or "<module>"
+
+
+def _chain(node: ast.AST) -> str:
+    """Dotted name of an attribute/name expression ("jax.random.PRNGKey"),
+    "" when the expression is not a plain chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _finding(rule: str, node: ast.AST, path: str, message: str, hint: str) -> Finding:
+    return Finding(
+        rule=rule,
+        path=path,
+        line=getattr(node, "lineno", 0),
+        symbol=_symbol(node),
+        message=message,
+        hint=hint,
+    )
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+
+_GLOBAL_RNG_FNS = {
+    "seed",
+    "rand",
+    "randn",
+    "randint",
+    "random",
+    "normal",
+    "uniform",
+    "choice",
+    "permutation",
+    "shuffle",
+    "standard_normal",
+}
+
+
+def _rule_rng001(tree: ast.AST, path: str) -> Iterator[Finding]:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _chain(node.func)
+        parts = chain.split(".")
+        if (
+            len(parts) == 3
+            and parts[0] in ("np", "numpy")
+            and parts[1] == "random"
+            and parts[2] in _GLOBAL_RNG_FNS
+        ):
+            yield _finding(
+                "RNG001",
+                node,
+                path,
+                f"global NumPy RNG call {chain}() — hidden process-wide state",
+                "use an explicit np.random.default_rng(seed) Generator",
+            )
+
+
+def _rule_rng002(tree: ast.AST, path: str) -> Iterator[Finding]:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _chain(node.func)
+        if not (chain == "PRNGKey" or chain.endswith(".PRNGKey")):
+            continue
+        if not (node.args and isinstance(node.args[0], ast.Constant)):
+            continue  # seed threaded from the caller — fine
+        # shape-only traces never consume the key's value
+        in_eval_shape = any(
+            isinstance(a, ast.Call) and _chain(a.func).endswith("eval_shape")
+            for a in _ancestors(node)
+        )
+        if in_eval_shape:
+            continue
+        yield _finding(
+            "RNG002",
+            node,
+            path,
+            f"PRNGKey with hardcoded seed {ast.unparse(node.args[0])} in library code",
+            "thread the key (or seed) in from the caller; "
+            "jax.eval_shape traces are exempt (value never consumed)",
+        )
+
+
+_WALLCLOCK = {"time.time", "time.perf_counter", "time.monotonic"}
+
+
+def _is_jitted(fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        for sub in ast.walk(dec):
+            if isinstance(sub, (ast.Name, ast.Attribute)):
+                chain = _chain(sub)
+                if chain == "jit" or chain.endswith(".jit"):
+                    return True
+    return False
+
+
+def _rule_time001(tree: ast.AST, path: str) -> Iterator[Finding]:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or _chain(node.func) not in _WALLCLOCK:
+            continue
+        jitted = any(
+            isinstance(a, (ast.FunctionDef, ast.AsyncFunctionDef)) and _is_jitted(a)
+            for a in _ancestors(node)
+        )
+        if jitted:
+            yield _finding(
+                "TIME001",
+                node,
+                path,
+                f"{_chain(node.func)}() inside a jit-decorated function — "
+                "evaluated once at trace time, constant thereafter",
+                "time outside the traced function (callers own the clock)",
+            )
+
+
+_TRACED_REDUCERS = {
+    "any",
+    "all",
+    "sum",
+    "max",
+    "min",
+    "mean",
+    "isnan",
+    "isinf",
+    "isfinite",
+    "count_nonzero",
+    "array_equal",
+    "allclose",
+}
+
+
+def _rule_trace001(tree: ast.AST, path: str) -> Iterator[Finding]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.If, ast.While)):
+            test = node.test
+        elif isinstance(node, ast.IfExp):
+            test = node.test
+        else:
+            continue
+        for sub in ast.walk(test):
+            if not isinstance(sub, ast.Call):
+                continue
+            chain = _chain(sub.func)
+            parts = chain.split(".")
+            if (
+                len(parts) >= 2
+                and parts[0] in ("jnp", "jax")
+                and parts[-1] in _TRACED_REDUCERS
+            ):
+                yield _finding(
+                    "TRACE001",
+                    node,
+                    path,
+                    f"Python branch on traced value {chain}(...) — "
+                    "raises ConcretizationTypeError under jit, or silently "
+                    "bakes the traced branch",
+                    "use jnp.where / jax.lax.cond, or hoist the check out of "
+                    "traced code",
+                )
+                break  # one finding per branch statement
+
+
+_DTYPE_LITERALS = {
+    "jnp.bfloat16",
+    "jnp.float16",
+    "jax.numpy.bfloat16",
+    "jax.numpy.float16",
+}
+
+
+def _rule_dtype001(tree: ast.AST, path: str) -> Iterator[Finding]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and _chain(node) in _DTYPE_LITERALS:
+            yield _finding(
+                "DTYPE001",
+                node,
+                path,
+                f"hardcoded low-precision dtype literal {_chain(node)}",
+                "derive the dtype from the tensor it must match "
+                "(cache[...].dtype / x.dtype) — a literal here is how the "
+                "PR 6 cache-dtype drift happened; allowlist declaration "
+                "sites and config gates",
+            )
+
+
+def _rule_mut001(tree: ast.AST, path: str) -> Iterator[Finding]:
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        defaults = list(node.args.defaults) + [
+            d for d in node.args.kw_defaults if d is not None
+        ]
+        for d in defaults:
+            mutable = isinstance(d, (ast.List, ast.Dict, ast.Set)) or (
+                isinstance(d, ast.Call) and _chain(d.func) in ("list", "dict", "set")
+            )
+            if mutable:
+                yield _finding(
+                    "MUT001",
+                    d,
+                    path,
+                    f"mutable default argument in {node.name}()",
+                    "default to None and construct inside the function body",
+                )
+
+
+RULES: Dict[str, dict] = {
+    "RNG001": {
+        "title": "global NumPy RNG in library code",
+        "fn": _rule_rng001,
+    },
+    "RNG002": {
+        "title": "PRNGKey with hardcoded seed (eval_shape exempt)",
+        "fn": _rule_rng002,
+    },
+    "TIME001": {
+        "title": "wall-clock read inside a jitted function",
+        "fn": _rule_time001,
+    },
+    "TRACE001": {
+        "title": "Python branch on a traced-value reduction",
+        "fn": _rule_trace001,
+    },
+    "DTYPE001": {
+        "title": "hardcoded bf16/f16 dtype literal",
+        "fn": _rule_dtype001,
+    },
+    "MUT001": {
+        "title": "mutable default argument",
+        "fn": _rule_mut001,
+    },
+}
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+def lint_source(
+    source: str, path: str, rules: Optional[Sequence[str]] = None
+) -> List[Finding]:
+    """Lint one source string; ``path`` is the repo-relative name reported."""
+    tree = ast.parse(source, filename=path)
+    _attach_parents(tree)
+    out: List[Finding] = []
+    for rid in rules or RULES:
+        out.extend(RULES[rid]["fn"](tree, path))
+    out.sort(key=lambda f: (f.path, f.line, f.rule))
+    return out
+
+
+def lint_file(
+    path: str, root: str = ".", rules: Optional[Sequence[str]] = None
+) -> List[Finding]:
+    rel = os.path.relpath(path, root).replace(os.sep, "/")
+    with open(path, "r", encoding="utf-8") as f:
+        return lint_source(f.read(), rel, rules)
+
+
+def lint_paths(
+    src: str, root: str = ".", rules: Optional[Sequence[str]] = None
+) -> List[Finding]:
+    """Lint every ``*.py`` under ``src`` (a file path is also accepted)."""
+    if os.path.isfile(src):
+        return lint_file(src, root, rules)
+    out: List[Finding] = []
+    for dirpath, dirnames, filenames in os.walk(src):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for name in sorted(filenames):
+            if name.endswith(".py"):
+                out.extend(lint_file(os.path.join(dirpath, name), root, rules))
+    return out

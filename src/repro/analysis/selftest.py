@@ -1,0 +1,94 @@
+"""Self-test: prove the checker still detects the seeded known-bad fixtures.
+
+A static checker that silently stops finding things is worse than no
+checker — CI runs ``python -m repro.analysis --self-test`` so any refactor
+of the lint rules or the taint walker that loses detection power fails the
+build, not just the unit tests.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import lint, verifier
+
+#: every lint rule must fire on lint_bad.py
+_EXPECT_LINT = ("RNG001", "RNG002", "TIME001", "TRACE001", "DTYPE001", "MUT001")
+
+
+def load_fixture_module(path: str):
+    """Import a fixture file by path without touching sys.path."""
+    spec = importlib.util.spec_from_file_location("analysis_fixture", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def run(repo_root: str) -> List[str]:
+    """Returns failure messages; empty list == all seeded bugs detected."""
+    fixtures = os.path.join(repo_root, "analysis", "fixtures")
+    failures: List[str] = []
+
+    # ---- lint pass detects every rule on the bad fixture ----
+    bad = lint.lint_file(os.path.join(fixtures, "lint_bad.py"), root=repo_root)
+    fired = {f.rule for f in bad}
+    for rule in _EXPECT_LINT:
+        if rule not in fired:
+            failures.append(f"lint rule {rule} did not fire on lint_bad.py")
+
+    # ---- and stays quiet on the good fixture ----
+    good = lint.lint_file(os.path.join(fixtures, "lint_good.py"), root=repo_root)
+    for f in good:
+        failures.append(f"false positive on lint_good.py: {f.rule} at line {f.line}")
+
+    # ---- jaxpr verifier detects every seeded kernel bug ----
+    K = load_fixture_module(os.path.join(fixtures, "bad_kernel.py"))
+    u32 = jax.ShapeDtypeStruct((8, 2), jnp.uint32)
+    i8 = jnp.int8
+    cases = [
+        (
+            "INV-PACKED-FLOAT",
+            lambda: verifier.check_function(K.leak_packed_to_float, u32),
+        ),
+        (
+            "INV-ACCUM-LOWFP",
+            lambda: verifier.check_function(K.accumulate_in_bf16, u32, u32),
+        ),
+        (
+            "INV-INT-DOT",
+            lambda: verifier.check_function(
+                K.int_dot_low_precision,
+                jax.ShapeDtypeStruct((4, 8), i8),
+                jax.ShapeDtypeStruct((8, 4), i8),
+            ),
+        ),
+        (
+            "INV-CACHE-DTYPE",
+            lambda: verifier.check_cache_contract(
+                lambda: K.init_cache(2, 8, 4),
+                K.drifting_step,
+                jax.ShapeDtypeStruct((2, 4), jnp.float32),
+            ),
+        ),
+        (
+            "INV-CACHE-SHAPE",
+            lambda: verifier.check_cache_contract(
+                lambda: K.init_cache(2, 8, 4),
+                K.growing_step,
+                jax.ShapeDtypeStruct((2, 4), jnp.float32),
+            ),
+        ),
+    ]
+    for rule, thunk in cases:
+        got = {f.rule for f in thunk()}
+        if rule not in got:
+            failures.append(
+                f"verifier did not flag {rule} on the bad_kernel fixture "
+                f"(got: {sorted(got) or 'nothing'})"
+            )
+    return failures

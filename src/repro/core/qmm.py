@@ -30,7 +30,6 @@ hardcoded default.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

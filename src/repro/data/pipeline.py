@@ -19,7 +19,7 @@ means re-implementing ``_batch_at`` only.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

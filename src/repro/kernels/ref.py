@@ -3,6 +3,12 @@
 Each oracle states the *integer* semantics of its kernel: unpack whatever is
 packed, do the matmul in plain jnp, return int32.  Kernels must match these
 bit-exactly (integer math); tests sweep shapes and dtypes against them.
+
+Every oracle asserts its input contract at entry (packing dtype, rank, and
+reduction-length consistency).  A parity test handing an oracle a float or
+mis-packed operand would otherwise silently promote through ``jnp.dot`` and
+"pass" against a kernel making the same mistake — the asserts make the
+contract violation loud at the oracle boundary instead.
 """
 
 from __future__ import annotations
@@ -15,12 +21,40 @@ from repro.core import packing
 __all__ = ["binary_qmm_ref", "popcount_qmm_ref", "bitserial_qmm_ref"]
 
 
+def _packed_words(k: int) -> int:
+    return (k + 31) // 32
+
+
+def _check_packed(name: str, x: jax.Array, k: int, axis: int) -> None:
+    """Packed operands are uint32 with ceil(k/32) words along ``axis``."""
+    if x.dtype != jnp.uint32:
+        raise TypeError(
+            f"{name}: packed operand must be uint32 bit-planes, got {x.dtype}"
+        )
+    if x.shape[axis] != _packed_words(k):
+        raise ValueError(
+            f"{name}: packed axis {axis} has {x.shape[axis]} words, "
+            f"expected ceil({k}/32) = {_packed_words(k)}"
+        )
+
+
 def binary_qmm_ref(a: jax.Array, w_packed: jax.Array, k: int) -> jax.Array:
     """Oracle for ``binary_qmm``: ``a (M, K) int8  @  unpack(w_packed) (K, N)``.
 
     ``w_packed`` is uint32 ``(ceil(K/32), N)``, 1-bit mantissas packed along
     the reduction dim; mantissa values are {0, 1}.
     """
+    if not jnp.issubdtype(a.dtype, jnp.integer):
+        raise TypeError(
+            f"binary_qmm_ref: activation mantissa must be integer, got {a.dtype}"
+        )
+    if a.shape[-1] != k:
+        raise ValueError(
+            f"binary_qmm_ref: a has K={a.shape[-1]}, caller declared k={k}"
+        )
+    if w_packed.ndim != 2:
+        raise ValueError(f"binary_qmm_ref: w_packed must be rank 2, got {w_packed.ndim}")
+    _check_packed("binary_qmm_ref", w_packed, k, axis=0)
     w = packing.unpack_bits(w_packed, 1, k, axis=0, dtype=jnp.int32)
     return jnp.dot(a.astype(jnp.int32), w, preferred_element_type=jnp.int32)
 
@@ -31,6 +65,13 @@ def popcount_qmm_ref(a_packed: jax.Array, b_packed: jax.Array, k: int) -> jax.Ar
     ``out[m, n] = sum_j a[m, j] * b[j, n]`` with a, b in {0,1};
     a_packed ``(M, Kw)`` packed along axis -1, b_packed ``(Kw, N)`` along 0.
     """
+    if a_packed.ndim != 2 or b_packed.ndim != 2:
+        raise ValueError(
+            "popcount_qmm_ref: operands must be rank 2, got "
+            f"{a_packed.ndim} and {b_packed.ndim}"
+        )
+    _check_packed("popcount_qmm_ref", a_packed, k, axis=-1)
+    _check_packed("popcount_qmm_ref", b_packed, k, axis=0)
     a = packing.unpack_bits(a_packed, 1, k, axis=-1, dtype=jnp.int32)
     b = packing.unpack_bits(b_packed, 1, k, axis=0, dtype=jnp.int32)
     return jnp.dot(a, b, preferred_element_type=jnp.int32)
@@ -49,6 +90,13 @@ def bitserial_qmm_ref(
     Result: ``sum_ij 2^(i+j) * (A_i @ B_j)`` == ``A @ B`` for the original
     multi-bit mantissas.
     """
+    if a_planes.ndim != 3 or b_planes.ndim != 3:
+        raise ValueError(
+            "bitserial_qmm_ref: plane stacks must be rank 3 (bits, ., .), got "
+            f"{a_planes.ndim} and {b_planes.ndim}"
+        )
+    _check_packed("bitserial_qmm_ref", a_planes, k, axis=-1)
+    _check_packed("bitserial_qmm_ref", b_planes, k, axis=-2)
     a_bits = a_planes.shape[0]
     b_bits = b_planes.shape[0]
     out = None

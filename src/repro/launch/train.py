@@ -14,7 +14,6 @@ the dry-run lowers.  ``--devices N`` requests N host placeholder devices
 
 import argparse
 import os
-import sys
 
 
 def _parse_early():

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, QuantConfig
 from repro.core import flow_abstraction as FA
 from repro.core import quantization as Q
+from repro.core import site_log
 from repro.models import layers as L
 
 __all__ = [
@@ -233,6 +234,13 @@ def _scores_int(q, k_mantissa, k_scale, k_offset, attn_bits: int):
     # per-row calibration (axis 0 kept): co-batched slots stay independent
     qq = Q.quantize_activation(q.astype(jnp.float32), attn_bits, per_channel_axis=0)
     qr = Q.recenter(qq)
+    if site_log.is_recording():
+        site_log.record(
+            kind="attn",
+            site="attn.qk",
+            bits=attn_bits,
+            mantissa_dtype=str(qr.mantissa.dtype),
+        )
     x1 = qr.mantissa.reshape(b, s, kvh, g, dh)  # int8
     x2 = k_mantissa.astype(jnp.int8)  # (B,T,kvH,dh)
     xy = _int_einsum("bskgd,btkd->bkgst", x1, x2).astype(jnp.float32)
@@ -291,6 +299,13 @@ def _scores_int_latent(q_abs, ckv_m, ckv_scale, ckv_offset, attn_bits: int):
     # couple through a shared calibration (batch invariance)
     qq = Q.quantize_activation(q_abs.astype(jnp.float32), attn_bits, per_channel_axis=0)
     qr = Q.recenter(qq)
+    if site_log.is_recording():
+        site_log.record(
+            kind="attn",
+            site="attn.qk_latent",
+            bits=attn_bits,
+            mantissa_dtype=str(qr.mantissa.dtype),
+        )
     x1 = qr.mantissa.reshape(b, s * h, r)
     x2 = jnp.swapaxes(ckv_m, -1, -2).astype(jnp.int8)  # (b, r, t)
     xy = FA.default_int_matmul(x1, x2, attn_bits, 8).astype(jnp.float32)
@@ -611,16 +626,19 @@ def mla_attention(
                 sc = jnp.broadcast_to(jnp.reshape(cache["ckv_scale"], (-1,)), (b,))
                 off = jnp.broadcast_to(jnp.reshape(cache["ckv_offset"], (-1,)), (b,))
             c_m = _quantize_to_cache(ckv, sc, off)
+            # rope slot dtype derives from the cache leaf (never a literal:
+            # a write/init mismatch is exactly the PR 6 drift class)
+            r_u = k_rope.astype(cache["k_rope"].dtype)
             if decode:
                 new_ckv = row_write(cache["ckv"], c_m, pos)
-                new_rope = row_write(cache["k_rope"], k_rope.astype(jnp.bfloat16), pos)
+                new_rope = row_write(cache["k_rope"], r_u, pos)
             else:
                 # prefill contract: fresh/uniform cache rows (row-0 cursor)
                 new_ckv = jax.lax.dynamic_update_slice_in_dim(
                     cache["ckv"], c_m, pos[0], 1
                 )
                 new_rope = jax.lax.dynamic_update_slice_in_dim(
-                    cache["k_rope"], k_rope.astype(jnp.bfloat16), pos[0], 1
+                    cache["k_rope"], r_u, pos[0], 1
                 )
             cache = dict(
                 cache,
@@ -632,7 +650,7 @@ def mla_attention(
             )
         else:
             c_u = ckv.astype(cache["ckv"].dtype)
-            r_u = k_rope.astype(jnp.bfloat16)
+            r_u = k_rope.astype(cache["k_rope"].dtype)
             if decode:
                 new_ckv = row_write(cache["ckv"], c_u, pos)
                 new_rope = row_write(cache["k_rope"], r_u, pos)

@@ -27,6 +27,7 @@ from repro.core import flow_abstraction as FA
 from repro.core import packing
 from repro.core import qmm as QE
 from repro.core import quantization as Q
+from repro.core import site_log
 
 __all__ = [
     "qlinear",
@@ -127,6 +128,15 @@ def qlinear(
             offset=xq.offset,
             bits=bits,
         )
+        if site_log.is_recording():
+            site_log.record(
+                kind="qlinear",
+                site=name,
+                bits=bits,
+                cfg_bits=quant.act_bits,
+                mantissa_dtype=str(xq.mantissa.dtype),
+                backend=quant.backend_for(name),
+            )
         out = QE.qmm(
             x2, wq, backend=quant.backend_for(name), w_colsum=p.get("w_colsum")
         )

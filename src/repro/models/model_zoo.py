@@ -353,7 +353,10 @@ def prefill(
         encoder_out = None
         if cfg.encoder is not None and cfg.encoder.n_layers and frontend is not None:
             encoder_out = _run_encoder(params, frontend, cfg, "serve")
-            cache = dict(cache, encoder_out=encoder_out.astype(jnp.bfloat16))
+            # cache-slot dtype derives from the init leaf (never a literal)
+            cache = dict(
+                cache, encoder_out=encoder_out.astype(cache["encoder_out"].dtype)
+            )
         x = _embed_inputs(params, tokens, cfg, positions, frontend, "serve")
         x = x.astype(jnp.bfloat16)
         x, new_stack, _ = T.stack_apply(

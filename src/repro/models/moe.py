@@ -15,7 +15,7 @@ GShard semantics; capacity_factor sizes the buffer).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

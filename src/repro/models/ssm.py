@@ -173,16 +173,17 @@ def ssd_mixer(
     zxbcdt = L.qlinear(p["in_proj"], x, cfg.quant, mode, name="ssm.in_proj")
     z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * gz], axis=-1)
     # xbc: (B, S, di + 2*gz) goes through the short conv
-    # conv window is STORED f32 (init_cache dtype) but COMPUTED in the
-    # activation dtype, like the rglru path — so the conv numerics don't
-    # depend on whether the state came from prefill or cache_insert.
+    # conv window is STORED in the state-slot dtype (derived from the live
+    # leaf, so prefill writes can never drift from init_ssd_state — the PR 6
+    # bug class) but COMPUTED in the activation dtype, like the rglru path.
+    conv_dtype = state["conv"].dtype if state is not None else jnp.float32
     if state is not None and s == 1:
         conv_in = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)
-        new_conv = conv_in[:, 1:].astype(jnp.float32)
+        new_conv = conv_in[:, 1:].astype(conv_dtype)
     else:
         pad = jnp.zeros((b, s_cfg.d_conv - 1, xbc.shape[-1]), xbc.dtype)
         conv_in = jnp.concatenate([pad, xbc], axis=1)
-        new_conv = conv_in[:, -(s_cfg.d_conv - 1) :].astype(jnp.float32)
+        new_conv = conv_in[:, -(s_cfg.d_conv - 1) :].astype(conv_dtype)
     # depthwise causal conv via windowed sum
     w = p["conv_w"].astype(conv_in.dtype)  # (d_conv, C)
     conv_out = sum(conv_in[:, i : i + s] * w[i] for i in range(s_cfg.d_conv))
@@ -277,14 +278,16 @@ def rglru_mixer(
     xb = L.qlinear(p["in_x"], x, cfg.quant, mode, name="rglru.in_x")
     gate = L.qlinear(p["in_gate"], x, cfg.quant, mode, name="rglru.in_gate")
 
-    # causal depthwise conv width 4
+    # causal depthwise conv width 4; the stored window keeps the state-slot
+    # dtype (derived from the live leaf, never a literal)
+    conv_dtype = state["conv"].dtype if state is not None else jnp.float32
     if state is not None and s == 1:
         conv_in = jnp.concatenate([state["conv"].astype(xb.dtype), xb], axis=1)
-        new_conv = conv_in[:, 1:].astype(jnp.float32)
+        new_conv = conv_in[:, 1:].astype(conv_dtype)
     else:
         pad = jnp.zeros((b, 3, xb.shape[-1]), xb.dtype)
         conv_in = jnp.concatenate([pad, xb], axis=1)
-        new_conv = conv_in[:, -3:].astype(jnp.float32)
+        new_conv = conv_in[:, -3:].astype(conv_dtype)
     w = p["conv_w"].astype(conv_in.dtype)
     xb = sum(conv_in[:, i : i + s] * w[i] for i in range(4))
 

@@ -13,7 +13,7 @@ mapped to pre-norm — systems-equivalent, noted in DESIGN.md).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

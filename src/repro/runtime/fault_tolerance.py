@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List
 
 import jax
 import numpy as np

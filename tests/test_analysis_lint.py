@@ -1,0 +1,199 @@
+"""Pass 2 (AST lint) unit tests: per-rule fixtures, symbol computation,
+allowlist load/match/staleness, and the production-tree gate."""
+
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import findings as F
+from repro.analysis import lint
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+FIXTURES = os.path.join(REPO, "analysis", "fixtures")
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# fixtures: every rule fires on the bad file, none on the good file
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "rule", ["RNG001", "RNG002", "TIME001", "TRACE001", "DTYPE001", "MUT001"]
+)
+def test_rule_fires_on_bad_fixture(rule):
+    found = lint.lint_file(os.path.join(FIXTURES, "lint_bad.py"), root=REPO)
+    assert rule in _rules(found), f"{rule} missed its seeded fixture"
+
+
+def test_good_fixture_is_clean():
+    found = lint.lint_file(os.path.join(FIXTURES, "lint_good.py"), root=REPO)
+    assert found == [], [f"{f.rule}:{f.line}" for f in found]
+
+
+def test_bad_fixture_paths_are_repo_relative():
+    found = lint.lint_file(os.path.join(FIXTURES, "lint_bad.py"), root=REPO)
+    assert all(f.path == "analysis/fixtures/lint_bad.py" for f in found)
+
+
+# ---------------------------------------------------------------------------
+# targeted rule behavior
+# ---------------------------------------------------------------------------
+
+
+def _lint(src, rules=None):
+    return lint.lint_source(textwrap.dedent(src), "t.py", rules)
+
+
+def test_rng002_eval_shape_exempt():
+    found = _lint(
+        """
+        import jax
+        def shapes(fn):
+            return jax.eval_shape(fn, jax.random.PRNGKey(0))
+        def values():
+            return jax.random.PRNGKey(0)
+        """,
+        ["RNG002"],
+    )
+    assert len(found) == 1
+    assert found[0].symbol == "values"
+
+
+def test_rng002_threaded_seed_ok():
+    found = _lint(
+        """
+        import jax
+        def make(seed):
+            return jax.random.PRNGKey(seed)
+        """,
+        ["RNG002"],
+    )
+    assert found == []
+
+
+def test_time001_only_inside_jit():
+    found = _lint(
+        """
+        import time, jax
+        def wall():
+            return time.time()
+        @jax.jit
+        def traced(x):
+            return x + time.perf_counter()
+        """,
+        ["TIME001"],
+    )
+    assert [f.symbol for f in found] == ["traced"]
+
+
+def test_trace001_one_finding_per_branch():
+    found = _lint(
+        """
+        import jax.numpy as jnp
+        def f(x):
+            if jnp.any(x) and jnp.all(x):
+                return x
+        """,
+        ["TRACE001"],
+    )
+    assert len(found) == 1
+
+
+def test_trace001_ignores_dtype_introspection():
+    # jnp.issubdtype operates on dtypes, not traced values — must not fire
+    found = _lint(
+        """
+        import jax.numpy as jnp
+        def f(x):
+            if jnp.issubdtype(x.dtype, jnp.floating):
+                return x
+        """,
+        ["TRACE001"],
+    )
+    assert found == []
+
+
+def test_symbol_is_nested_dotted_chain():
+    found = _lint(
+        """
+        import numpy as np
+        def outer():
+            def inner():
+                np.random.seed(0)
+            return inner
+        """,
+        ["RNG001"],
+    )
+    assert found[0].symbol == "outer.inner"
+
+
+def test_mut001_kwonly_defaults():
+    found = _lint("def f(x, *, t={}):\n    return t\n", ["MUT001"])
+    assert _rules(found) == {"MUT001"}
+
+
+# ---------------------------------------------------------------------------
+# allowlist
+# ---------------------------------------------------------------------------
+
+
+def _entry(**kw):
+    base = dict(rule="DTYPE001", file="src/*.py", symbol="*", reason="r")
+    base.update(kw)
+    return F.AllowEntry(**base)
+
+
+def _finding(**kw):
+    base = dict(
+        rule="DTYPE001", path="src/a.py", line=3, symbol="f", message="m"
+    )
+    base.update(kw)
+    return F.Finding(**base)
+
+
+def test_allowlist_filter_and_stale():
+    allow = F.Allowlist([_entry(), _entry(rule="MUT001", file="never/*")])
+    kept, suppressed = allow.filter([_finding(), _finding(rule="RNG001")])
+    assert [f.rule for f in kept] == ["RNG001"]
+    assert [f.rule for f in suppressed] == ["DTYPE001"]
+    assert [e.rule for e in allow.stale_entries()] == ["MUT001"]
+
+
+def test_allowlist_symbol_pattern():
+    allow = F.Allowlist([_entry(symbol="init_*")])
+    kept, suppressed = allow.filter(
+        [_finding(symbol="init_cache"), _finding(symbol="decode")]
+    )
+    assert [f.symbol for f in kept] == ["decode"]
+    assert [f.symbol for f in suppressed] == ["init_cache"]
+
+
+def test_allowlist_rejects_missing_reason(tmp_path):
+    p = tmp_path / "allow.toml"
+    p.write_text('[[allow]]\nrule = "DTYPE001"\nfile = "a"\nsymbol = "b"\n')
+    with pytest.raises(ValueError, match="reason"):
+        F.Allowlist.load(str(p))
+
+
+def test_checked_in_allowlist_loads():
+    allow = F.Allowlist.load(os.path.join(REPO, "analysis", "allowlist.toml"))
+    assert allow.entries
+    assert all(e.reason for e in allow.entries)
+
+
+# ---------------------------------------------------------------------------
+# the gate CI enforces: the production tree is clean modulo the allowlist
+# ---------------------------------------------------------------------------
+
+
+def test_src_tree_clean_under_allowlist():
+    found = lint.lint_paths(os.path.join(REPO, "src"), root=REPO)
+    allow = F.Allowlist.load(os.path.join(REPO, "analysis", "allowlist.toml"))
+    kept, _ = allow.filter(found)
+    assert kept == [], F.render_text(kept)
+    assert allow.stale_entries() == [], "stale allowlist entries"

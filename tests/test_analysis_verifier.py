@@ -1,0 +1,270 @@
+"""Pass 1 (jaxpr verifier) unit tests: taint propagation per invariant,
+control-flow recursion, cache contract, site checks, and the real-engine
+sweeps that CI runs."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+
+from repro.analysis import verifier
+from repro.analysis.selftest import load_fixture_module
+from repro.core import packing
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+FIXTURES = os.path.join(REPO, "analysis", "fixtures")
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@pytest.fixture(scope="module")
+def bad_kernel():
+    return load_fixture_module(os.path.join(FIXTURES, "bad_kernel.py"))
+
+
+# ---------------------------------------------------------------------------
+# taint walker on the seeded bad fixtures
+# ---------------------------------------------------------------------------
+
+
+def test_packed_to_float_flagged(bad_kernel):
+    found = verifier.check_function(
+        bad_kernel.leak_packed_to_float, _sds((8, 2), jnp.uint32)
+    )
+    assert "INV-PACKED-FLOAT" in _rules(found)
+
+
+def test_bf16_accumulation_flagged(bad_kernel):
+    found = verifier.check_function(
+        bad_kernel.accumulate_in_bf16,
+        _sds((8, 2), jnp.uint32),
+        _sds((8, 2), jnp.uint32),
+    )
+    assert "INV-ACCUM-LOWFP" in _rules(found)
+
+
+def test_low_precision_int_dot_flagged(bad_kernel):
+    found = verifier.check_function(
+        bad_kernel.int_dot_low_precision,
+        _sds((4, 8), jnp.int8),
+        _sds((8, 4), jnp.int8),
+    )
+    assert "INV-INT-DOT" in _rules(found)
+
+
+# ---------------------------------------------------------------------------
+# taint walker on clean idioms (no false positives)
+# ---------------------------------------------------------------------------
+
+
+def test_popcount_then_f32_epilogue_clean():
+    # the legal datapath: AND -> popcount -> int32 sum -> f32 epilogue
+    def good(a, b):
+        counts = lax.population_count(a & b)
+        acc = jnp.sum(counts.astype(jnp.int32), axis=-1)
+        return acc.astype(jnp.float32) * 0.5
+
+    found = verifier.check_function(
+        good, _sds((8, 2), jnp.uint32), _sds((8, 2), jnp.uint32)
+    )
+    assert found == []
+
+
+def test_unpack_launders_packed_taint():
+    def good(p):
+        x = packing.unpack_bits(p, 1, 64, axis=0, dtype=jnp.int32)
+        return x.astype(jnp.float32)
+
+    found = verifier.check_function(good, _sds((2, 16), jnp.uint32))
+    assert found == []
+
+
+def test_pack_output_is_tainted():
+    def bad(x):
+        p = packing.pack_bits(x, 1, axis=-1)
+        return p.astype(jnp.float32)  # packed words treated as numbers
+
+    found = verifier.check_function(bad, _sds((4, 64), jnp.uint8))
+    assert "INV-PACKED-FLOAT" in _rules(found)
+
+
+def test_int32_dot_with_preferred_type_clean():
+    def good(a, b):
+        return jnp.dot(a, b, preferred_element_type=jnp.int32)
+
+    found = verifier.check_function(
+        good, _sds((4, 8), jnp.int8), _sds((8, 4), jnp.int8)
+    )
+    assert found == []
+
+
+def test_taint_flows_through_scan():
+    # packed carry survives a scan and leaks to float afterwards
+    def bad(p):
+        def body(c, _):
+            return c & jnp.uint32(7), c
+
+        _, ys = lax.scan(body, p, None, length=3)
+        return ys.astype(jnp.float32)
+
+    found = verifier.check_function(bad, _sds((8,), jnp.uint32))
+    assert "INV-PACKED-FLOAT" in _rules(found)
+
+
+def test_bool_outputs_drop_taint():
+    # comparisons on packed words produce masks, not numbers — selecting
+    # floats under such a mask is fine
+    def good(p, x):
+        mask = (p & jnp.uint32(1)) > 0
+        return jnp.where(mask, x, 0.0)
+
+    found = verifier.check_function(
+        good, _sds((8,), jnp.uint32), _sds((8,), jnp.float32)
+    )
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# cache contract
+# ---------------------------------------------------------------------------
+
+
+def test_cache_dtype_drift_caught(bad_kernel):
+    found = verifier.check_cache_contract(
+        lambda: bad_kernel.init_cache(2, 8, 4),
+        bad_kernel.drifting_step,
+        _sds((2, 4), jnp.float32),
+    )
+    assert _rules(found) == {"INV-CACHE-DTYPE"}
+    assert "conv" not in found[0].symbol  # leaf path names the drifted slot
+    assert "'k'" in found[0].symbol
+
+
+def test_cache_shape_growth_caught(bad_kernel):
+    found = verifier.check_cache_contract(
+        lambda: bad_kernel.init_cache(2, 8, 4),
+        bad_kernel.growing_step,
+        _sds((2, 4), jnp.float32),
+    )
+    assert "INV-CACHE-SHAPE" in _rules(found)
+
+
+def test_cache_struct_change_caught(bad_kernel):
+    found = verifier.check_cache_contract(
+        lambda: bad_kernel.init_cache(2, 8, 4),
+        lambda cache, x: {"k": cache["k"]},  # drops the pos leaf
+        _sds((2, 4), jnp.float32),
+    )
+    assert _rules(found) == {"INV-CACHE-STRUCT"}
+
+
+def test_pr6_drift_reintroduction_caught():
+    """Reintroducing the PR 6 bug (an SSM conv window written in bf16 into
+    an f32-initialized slot) in a real model step must be flagged."""
+    from repro.configs import get_config
+    from repro.configs.smoke import smoke_variant
+    from repro.models import model_zoo as Z
+
+    cfg = smoke_variant(get_config("mamba2-130m"))
+    sp = jax.eval_shape(
+        lambda k: Z.prepare_serving_params(Z.init_params(k, cfg), cfg),
+        _sds((2,), jnp.uint32),
+    )
+    tok = _sds((2,), jnp.int32)
+
+    def drifted_decode(cache, tokens, params):
+        _, c = Z.decode_step(params, tokens, cfg, cache)
+        per0 = dict(c["stack"]["period"][0])
+        per0["conv"] = per0["conv"].astype(jnp.bfloat16)  # the bug
+        stack = dict(c["stack"], period=[per0] + list(c["stack"]["period"][1:]))
+        return dict(c, stack=stack)
+
+    def clean_decode(cache, tokens, params):
+        return Z.decode_step(params, tokens, cfg, cache)[1]
+
+    init = lambda: Z.init_cache(2, 32, cfg)
+    assert verifier.check_cache_contract(init, clean_decode, tok, sp) == []
+    found = verifier.check_cache_contract(init, drifted_decode, tok, sp)
+    assert "INV-CACHE-DTYPE" in _rules(found)
+    assert any("conv" in f.symbol for f in found)
+
+
+# ---------------------------------------------------------------------------
+# site checks
+# ---------------------------------------------------------------------------
+
+
+def _cfg(name="granite-8b"):
+    from repro.configs import get_config
+    from repro.configs.smoke import smoke_variant
+
+    return smoke_variant(get_config(name))
+
+
+def test_site_findings_unnamed_and_bits_and_mantissa():
+    cfg = _cfg()
+    sites = [
+        {"kind": "qlinear", "site": "", "bits": 8, "cfg_bits": 8,
+         "mantissa_dtype": "uint8"},
+        {"kind": "qlinear", "site": "ffn.up", "bits": 4, "cfg_bits": 8,
+         "mantissa_dtype": "uint8"},
+        {"kind": "qlinear", "site": "ffn.down", "bits": 8, "cfg_bits": 8,
+         "mantissa_dtype": "int32"},
+        {"kind": "attn", "site": "attn.qk", "bits": cfg.quant.attn_act_bits,
+         "mantissa_dtype": "int8"},
+    ]
+    found = verifier._site_findings(sites, cfg, "t")
+    assert _rules(found) == {"INV-SITE-NAME", "INV-SITE-BITS", "INV-SITE-MANTISSA"}
+
+
+def test_arch_trace_records_named_sites():
+    from repro.core import site_log
+    from repro.models import model_zoo as Z
+
+    cfg = _cfg()
+    sp = jax.eval_shape(
+        lambda k: Z.prepare_serving_params(Z.init_params(k, cfg), cfg),
+        _sds((2,), jnp.uint32),
+    )
+    cache = jax.eval_shape(lambda: Z.init_cache(2, 32, cfg))
+    with site_log.recording() as sites:
+        jax.eval_shape(
+            lambda p, t, c: Z.decode_step(p, t, cfg, c),
+            sp, _sds((2,), jnp.int32), cache,
+        )
+    ql = [s for s in sites if s["kind"] == "qlinear"]
+    assert ql, "decode trace recorded no qlinear sites"
+    assert all(s["site"] for s in ql)
+    assert {"attn"} <= {s["kind"] for s in sites}  # act x act sites too
+
+
+# ---------------------------------------------------------------------------
+# the real-engine sweeps CI runs (one backend + one arch here; CI runs all)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["mxu", "popcount", "pallas"])
+def test_backend_sweep_clean(backend):
+    from repro.analysis.findings import render_text
+
+    found = verifier.verify_backends((backend,))
+    assert found == [], render_text(found)
+
+
+def test_arch_sweep_clean_one_arch():
+    from repro.analysis.findings import render_text
+
+    found = verifier.verify_arch("mamba2-130m")
+    assert found == [], render_text(found)
+
+
+def test_encoder_only_arch_skipped():
+    assert verifier.verify_arch("bit-bert-base") == []
