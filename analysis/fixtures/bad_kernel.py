@@ -21,6 +21,27 @@ def accumulate_in_bf16(a_packed, b_packed):
     return jnp.sum(counts.astype(jnp.bfloat16), axis=-1)
 
 
+def fused_kernel_lowfp(a_packed, b_packed):
+    """INV-ACCUM-LOWFP at the kernel boundary: a Pallas kernel fed packed
+    bit-planes finishes its accumulation in bfloat16 instead of returning an
+    integer accumulator or an f32 fused epilogue."""
+    import jax
+    from jax.experimental import pallas as pl
+
+    def kernel(a_ref, b_ref, o_ref):
+        counts = lax.population_count(a_ref[...] & b_ref[...])
+        o_ref[...] = jnp.sum(
+            counts.astype(jnp.bfloat16), axis=-1, keepdims=True
+        )
+
+    m = a_packed.shape[0]
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.bfloat16),
+        interpret=True,
+    )(a_packed, b_packed)
+
+
 def int_dot_low_precision(a, b):
     """INV-INT-DOT: int8 x int8 dot without preferred_element_type=int32
     accumulates in int8 and wraps after 128 / 127."""

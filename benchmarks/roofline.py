@@ -5,6 +5,16 @@ serving claims.  Needs dry-run artifacts first:
     PYTHONPATH=src python -m repro.launch.dryrun --all
 Run:        PYTHONPATH=src python benchmarks/roofline.py
 
+QMM-backend mode (``repro.core.qmm_roofline``): place every *registered*
+QMM backend (mxu / popcount / pallas / fused, plus anything added later)
+against the memory-bandwidth roof using its registry ``traffic_model``,
+and record the ``BENCH_qmm.json`` artifact:
+
+    PYTHONPATH=src python benchmarks/roofline.py --qmm-out BENCH_qmm.json
+    PYTHONPATH=src python benchmarks/roofline.py --smoke \
+        --qmm-out artifacts/BENCH_qmm_ci.json      # CI cell, tiny shapes
+    PYTHONPATH=src python benchmarks/roofline.py --validate BENCH_qmm.json
+
 Per (arch x shape x mesh) cell:
 
   compute term    = HLO_FLOPs_per_device / peak_FLOP/s        [s]
@@ -150,6 +160,62 @@ def run() -> list:
     return rows
 
 
-if __name__ == "__main__":
+def run_qmm(smoke: bool = False, out: str | None = None) -> dict:
+    """QMM-backend roofline over every registered backend; optional artifact."""
+    from repro.core import qmm_roofline as R
+
+    if smoke:
+        doc = R.run_qmm_roofline(R.SMOKE_SHAPES, R.SMOKE_PRECISIONS, warmup=1, reps=1)
+    else:
+        doc = R.run_qmm_roofline()
+    if out:
+        R.save_qmm_bench(out, doc)
+    return doc
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument(
+        "--smoke",
+        action="store_true",
+        help="QMM mode with tiny shapes / single rep (the CI cell)",
+    )
+    p.add_argument(
+        "--qmm-out",
+        metavar="PATH",
+        help="run the QMM-backend roofline and write the BENCH_qmm.json artifact",
+    )
+    p.add_argument(
+        "--validate",
+        metavar="PATH",
+        help="validate an existing BENCH_qmm.json against the schema and exit",
+    )
+    args = p.parse_args(argv)
+
+    if args.validate:
+        from repro.core import qmm_roofline as R
+
+        doc = R.load_qmm_bench(args.validate)
+        print(
+            f"{args.validate}: ok — {len(doc['cells'])} cells, "
+            f"backends {sorted({c['backend'] for c in doc['cells']})}"
+        )
+        return 0
+    if args.smoke or args.qmm_out:
+        from repro.core import qmm_roofline as R
+
+        doc = run_qmm(smoke=args.smoke, out=args.qmm_out)
+        print(R.format_table(doc))
+        if args.qmm_out:
+            print(f"wrote {args.qmm_out}")
+        return 0
+    # legacy mode: the dry-run-artifact roofline table
     for r in run():
         print(f"{r['name']},{r['us_per_call']:.2f},{r['derived']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

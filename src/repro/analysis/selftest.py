@@ -60,6 +60,13 @@ def run(repo_root: str) -> List[str]:
             lambda: verifier.check_function(K.accumulate_in_bf16, u32, u32),
         ),
         (
+            # same rule at the trusted kernel boundary: a pallas_call fed
+            # packed planes may exit int (counts) or f32 (fused epilogue),
+            # never bf16/f16
+            "INV-ACCUM-LOWFP",
+            lambda: verifier.check_function(K.fused_kernel_lowfp, u32, u32),
+        ),
+        (
             "INV-INT-DOT",
             lambda: verifier.check_function(
                 K.int_dot_low_precision,
@@ -91,4 +98,12 @@ def run(repo_root: str) -> List[str]:
                 f"verifier did not flag {rule} on the bad_kernel fixture "
                 f"(got: {sorted(got) or 'nothing'})"
             )
+
+    # ---- and the real fused kernel's jaxpr passes the taint rules ----
+    # (its pallas_call consumes packed planes and exits f32 — the legal
+    # fused-epilogue exit; INV-PACKED-FLOAT / INV-ACCUM-LOWFP stay quiet)
+    for f in verifier.verify_backends(("fused",)):
+        failures.append(
+            f"fused kernel jaxpr not clean: {f.rule} {f.message}"
+        )
     return failures

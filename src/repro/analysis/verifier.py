@@ -31,8 +31,11 @@ helpers (``pack_bits`` / ``pack_bitplanes`` / ``to_bitplanes``) carry the
 "packed" taint; ``unpack_bits`` / ``from_bitplanes`` launder it;
 ``population_count`` and ``pallas_call`` (trusted kernel boundary — kernel
 internals are covered by the parity tests against ``kernels/ref.py``)
-consume "packed" and emit the "counts" taint; converting counts to f32/f64
-is the legal epilogue exit, converting to bf16/f16 is a violation.
+consume "packed" and emit the "counts" taint on integer outputs.
+Converting counts to f32/f64 is the legal epilogue exit — including a
+Pallas kernel that applies the affine epilogue on-chip and returns f32
+directly (``kernels/fused_qmm.py``); a kernel or cast producing bf16/f16
+from packed/counts operands is INV-ACCUM-LOWFP.
 """
 
 from __future__ import annotations
@@ -44,10 +47,9 @@ import jax.numpy as jnp
 from jax import core as jcore
 
 from repro.analysis.findings import Finding
-from repro.core import packing
+from repro.core import backend_registry, packing
 from repro.core import qmm as QE
 from repro.core import site_log
-from repro.core.dispatch import BACKENDS
 from repro.core.quantization import QuantTensor
 
 __all__ = [
@@ -234,18 +236,26 @@ class _TaintWalk:
 
         elif prim == "pallas_call":
             # Trusted kernel boundary: internals are covered by the parity
-            # tests against kernels/ref.py.  A kernel fed packed operands
-            # must still emit an integer accumulator.
-            if TAINT_PACKED in joined:
-                floats = [v for v in eqn.outvars if _is_float(v)]
-                if floats:
+            # tests against kernels/ref.py.  A kernel fed packed/counted
+            # operands may exit in two legal ways: an integer accumulator
+            # (staged kernels; tagged "counts"), or f32/f64 — the fused
+            # kernel's on-chip affine epilogue.  bf16/f16 output would mean
+            # the popcount accumulation was finished in a low-precision
+            # float, losing exactness.
+            if joined & {TAINT_PACKED, TAINT_COUNTS}:
+                lowfp = [
+                    v for v in eqn.outvars if _dtype(v) in _LOWFP_DTYPES
+                ]
+                if lowfp:
                     self._violate(
-                        "INV-PACKED-FLOAT",
+                        "INV-ACCUM-LOWFP",
                         eqn,
-                        "packed bit-planes feed a Pallas kernel with "
-                        f"floating output {[str(_dtype(v)) for v in floats]}",
-                        "kernels consume packed words and return integer "
-                        "accumulators; apply the affine epilogue outside",
+                        "packed/accumulator operands feed a Pallas kernel "
+                        "with low-precision float output "
+                        f"{[str(_dtype(v)) for v in lowfp]}",
+                        "kernels must return integer accumulators or finish "
+                        "the epilogue in f32 (the fused-kernel exit) — "
+                        "bf16/f16 loses popcount exactness",
                     )
                 for v in eqn.outvars:
                     if _is_int(v):
@@ -472,9 +482,12 @@ def _backend_cases(backend: str):
 
 
 def verify_backends(backends: Optional[Sequence[str]] = None) -> List[Finding]:
-    """Taint-walk every registered QMM backend across the QMM-type grid."""
+    """Taint-walk every registered QMM backend across the QMM-type grid.
+
+    The sweep enumerates ``core.backend_registry`` — a newly registered
+    backend is verified with zero edits here."""
     out: List[Finding] = []
-    for backend in backends or BACKENDS:
+    for backend in backends or backend_registry.backend_names():
         for case, fn, args in _backend_cases(backend):
             out.extend(
                 check_function(fn, *args, name=f"backend:{backend}:{case}")

@@ -56,7 +56,8 @@ class QuantConfig:
     attn_act_bits: int = 8
     quantize_attention: bool = True
     kv_cache_bits: int = 8
-    # integer-MM backend: "auto" | "mxu" | "popcount" | "pallas" (core.qmm).
+    # integer-MM backend: "auto" or any name registered in
+    # core.backend_registry ("mxu", "popcount", "pallas", "fused", ...).
     # "auto" routes through the measured autotune cache (core.dispatch).
     backend: str = "mxu"
     # per-layer backend overrides: ((fnmatch pattern over the layer name,
@@ -68,19 +69,23 @@ class QuantConfig:
     # BETA storage insight applied to the collective fabric; §Perf).
     prebinarize_gather: bool = False
 
-    #: Valid integer-MM backends ("auto" = measured dispatch, core.dispatch).
-    KNOWN_BACKENDS = ("auto", "mxu", "popcount", "pallas")
+    @staticmethod
+    def known_backends() -> Tuple[str, ...]:
+        """Valid integer-MM backend names: "auto" (measured dispatch,
+        core.dispatch) plus every backend in ``core.backend_registry``."""
+        from repro.core import backend_registry
+
+        return ("auto",) + backend_registry.backend_names()
 
     def __post_init__(self):
-        if self.backend not in self.KNOWN_BACKENDS:
-            raise ValueError(
-                f"unknown backend {self.backend!r}; valid: {self.KNOWN_BACKENDS}"
-            )
+        known = self.known_backends()
+        if self.backend not in known:
+            raise ValueError(f"unknown backend {self.backend!r}; valid: {known}")
         for pattern, b in self.backend_overrides:
-            if b not in self.KNOWN_BACKENDS:
+            if b not in known:
                 raise ValueError(
                     f"backend_overrides[{pattern!r}] names unknown backend "
-                    f"{b!r}; valid: {self.KNOWN_BACKENDS}"
+                    f"{b!r}; valid: {known}"
                 )
 
     @property

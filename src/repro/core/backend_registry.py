@@ -1,0 +1,184 @@
+"""Pluggable QMM backend registry — the engine's extension point.
+
+BETA's QMM engine (§III-C) is a *configurable* datapath: one engine serving
+every precision mode.  The software analogue used to be a hardcoded
+``BACKENDS`` tuple plus an ``if backend == ...`` chain in ``core.qmm`` — every
+new backend had to be hand-threaded through the dispatcher, the config
+validator, and the analysis sweep.  This module replaces all of that with a
+registry: a backend is one :class:`QMMBackend` spec (a run callable plus
+capability flags), registered by name, and every consumer — ``qmm(backend=)``
+validation, ``dispatch.candidate_backends``, ``QuantConfig`` error messages,
+the verifier sweep, the roofline bench — enumerates the registry instead of
+literals.  Registering a new backend requires zero dispatcher edits.
+
+Capability flags:
+
+* ``precisions``  — the ``(act_bits, weight_bits)`` pairs the backend can
+  run, or ``None`` for "all".  ``weight_bits`` follows the qmm convention:
+  the *right* operand's bits (so act x act shows up as e.g. ``(8, 8)``).
+* ``rank2_only``  — the backend only accepts rank-2 operands (Pallas
+  kernels; callers flatten leading batch dims).
+* ``needs_unsigned_mantissas`` — the integer core consumes raw unsigned
+  mantissas (popcount lanes); the epilogue must skip re-centering.
+* ``probe``       — optional ``f(m, k, n) -> bool`` availability check for
+  one problem size on this host (e.g. interpret-mode kernels are only
+  offered on problems small enough to time cheaply).
+* ``traffic_model`` — optional ``f(m, k, n, act_bits, weight_bits) -> int``
+  returning the backend's modeled HBM bytes for one QMM; the roofline bench
+  (``core.qmm_roofline``) uses it to place the backend against the
+  memory-bandwidth roof.  Defaults to the fully-packed traffic model.
+
+Built-in backends live next to their implementations and self-register on
+import: ``repro.core.qmm`` registers ``mxu`` and ``popcount``;
+``repro.kernels.ops`` registers ``pallas`` and ``fused``.  Enumeration
+functions trigger those imports lazily so the registration order (and hence
+candidate order) is deterministic regardless of which module is imported
+first.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, FrozenSet, Optional, Tuple
+
+__all__ = [
+    "QMMBackend",
+    "register",
+    "register_backend",
+    "unregister",
+    "get_backend",
+    "backend_names",
+    "backend_specs",
+    "candidate_names",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QMMBackend:
+    """One QMM integer-core backend: its entry point plus capabilities.
+
+    ``run`` has the uniform signature
+    ``run(x: QuantTensor, w: QuantTensor, *, w_colsum, out_dtype) -> Array``
+    — exactly what ``qmm`` forwards after resolving ``backend="auto"``.
+    """
+
+    name: str
+    run: Callable
+    description: str = ""
+    #: Supported (act_bits, weight_bits) pairs; None means "every precision".
+    precisions: Optional[FrozenSet[Tuple[int, int]]] = None
+    #: Only rank-2 operands (callers flatten batch dims first).
+    rank2_only: bool = False
+    #: Integer core consumes raw unsigned mantissas (no re-centering).
+    needs_unsigned_mantissas: bool = False
+    #: Optional per-problem availability check on this host.
+    probe: Optional[Callable[[int, int, int], bool]] = None
+    #: Optional modeled HBM bytes f(m, k, n, act_bits, weight_bits).
+    traffic_model: Optional[Callable[[int, int, int, int, int], int]] = None
+
+    def supports_precision(self, act_bits: int, weight_bits: int) -> bool:
+        if self.precisions is None:
+            return True
+        return (int(act_bits), int(weight_bits)) in self.precisions
+
+    def eligible(
+        self,
+        m: int,
+        k: int,
+        n: int,
+        act_bits: int,
+        weight_bits: int,
+        *,
+        rank2: bool = True,
+    ) -> bool:
+        """Can this backend serve this problem on this host?"""
+        if self.rank2_only and not rank2:
+            return False
+        if not self.supports_precision(act_bits, weight_bits):
+            return False
+        if self.probe is not None and not self.probe(int(m), int(k), int(n)):
+            return False
+        return True
+
+
+_REGISTRY: Dict[str, QMMBackend] = {}
+
+# Modules whose import registers the built-in backends, in candidate order.
+_BUILTIN_MODULES = ("repro.core.qmm", "repro.kernels.ops")
+_builtins_loaded = False
+
+
+def _ensure_builtins() -> None:
+    """Import the built-in backend modules once (idempotent, cycle-safe:
+    neither module calls back into the enumeration functions at import)."""
+    global _builtins_loaded
+    if _builtins_loaded:
+        return
+    _builtins_loaded = True
+    for mod in _BUILTIN_MODULES:
+        importlib.import_module(mod)
+
+
+def register(spec: QMMBackend) -> QMMBackend:
+    """Add ``spec`` to the registry.  Duplicate names are an error — a
+    backend's name is its identity in autotune caches and configs."""
+    if spec.name in _REGISTRY:
+        raise ValueError(f"backend {spec.name!r} is already registered")
+    if not spec.name or spec.name == "auto":
+        raise ValueError(f"invalid backend name {spec.name!r}")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def register_backend(name: str, **caps):
+    """Decorator form: ``@register_backend("fused", rank2_only=True, ...)``
+    over the run callable.  Returns the callable unchanged so the module can
+    still export it directly."""
+
+    def deco(fn: Callable) -> Callable:
+        register(QMMBackend(name=name, run=fn, **caps))
+        return fn
+
+    return deco
+
+
+def unregister(name: str) -> None:
+    """Remove a backend (test isolation; no-op if absent)."""
+    _REGISTRY.pop(name, None)
+
+
+def get_backend(name: str) -> QMMBackend:
+    """Look up a backend spec by name; ValueError lists the known names."""
+    _ensure_builtins()
+    spec = _REGISTRY.get(name)
+    if spec is None:
+        raise ValueError(
+            f"unknown backend {name!r}; registered backends: "
+            f"{', '.join(backend_names())}"
+        )
+    return spec
+
+
+def backend_names() -> Tuple[str, ...]:
+    """Every registered backend name, in registration order."""
+    _ensure_builtins()
+    return tuple(_REGISTRY)
+
+
+def backend_specs() -> Tuple[QMMBackend, ...]:
+    _ensure_builtins()
+    return tuple(_REGISTRY.values())
+
+
+def candidate_names(
+    m: int, k: int, n: int, act_bits: int, weight_bits: int, *, rank2: bool = True
+) -> Tuple[str, ...]:
+    """Names of every backend eligible for this problem on this host —
+    the availability component of the autotune cache key."""
+    _ensure_builtins()
+    return tuple(
+        spec.name
+        for spec in _REGISTRY.values()
+        if spec.eligible(m, k, n, act_bits, weight_bits, rank2=rank2)
+    )

@@ -49,12 +49,13 @@ import jax
 import numpy as np
 
 __all__ = [
-    "BACKENDS",
+    "BACKENDS",  # deprecated dynamic view; use backend_registry.backend_names()
     "DEFAULT_BACKEND",
     "TuneKey",
     "TuneRecord",
     "AutotuneCache",
     "candidate_backends",
+    "make_problem",
     "choose_backend",
     "get_cache",
     "reset_cache",
@@ -62,16 +63,21 @@ __all__ = [
     "current_phase",
 ]
 
-#: Every backend the engine knows how to run (core.qmm dispatches on these).
-BACKENDS: Tuple[str, ...] = ("mxu", "popcount", "pallas")
-
 #: Fallback when autotuning is disabled or a cache entry is missing.
 DEFAULT_BACKEND = "mxu"
 
-# Off-TPU the Pallas kernels run in interpret mode — a correctness fallback,
-# not a performance contender; only offer them on problems small enough that
-# one timing probe stays cheap.
-_PALLAS_INTERPRET_MAX_MKN = 1 << 24
+
+def __getattr__(name: str) -> Tuple[str, ...]:
+    # Deprecated: ``dispatch.BACKENDS`` predates the backend registry.  It is
+    # served dynamically (PEP 562) so existing imports keep seeing every
+    # registered backend; new code should call
+    # ``repro.core.backend_registry.backend_names()`` directly.
+    if name == "BACKENDS":
+        from repro.core import backend_registry
+
+        return backend_registry.backend_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 _CACHE_ENV = "REPRO_QMM_AUTOTUNE_CACHE"
 _DISABLE_ENV = "REPRO_QMM_AUTOTUNE"
@@ -112,14 +118,14 @@ def candidate_backends(
     m: int, k: int, n: int, act_bits: int, weight_bits: int, *, rank2: bool = True
 ) -> Tuple[str, ...]:
     """Backends eligible for this problem on this host (the "availability"
-    component of the cache key)."""
-    cands = ["mxu", "popcount"]
-    if rank2:
-        from repro.kernels import ops  # lazy: keeps core import-light
+    component of the cache key) — enumerated from the backend registry, so
+    a newly registered backend becomes an autotune candidate with zero
+    dispatcher edits."""
+    from repro.core import backend_registry  # lazy: keeps core import-light
 
-        if ops.on_tpu() or m * k * n <= _PALLAS_INTERPRET_MAX_MKN:
-            cands.append("pallas")
-    return tuple(cands)
+    return backend_registry.candidate_names(
+        m, k, n, act_bits, weight_bits, rank2=rank2
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,7 +154,7 @@ class TuneRecord:
     failed: bool = False
 
 
-def _make_problem(key: TuneKey):
+def make_problem(key: TuneKey):
     """Synthetic operands matching the key, in the layout serving uses.
 
     weight_bits == 1 (act x weight): sign-binarized weights, BIT-PACKED with
@@ -259,7 +265,7 @@ class AutotuneCache:
             return TuneRecord(key.candidates[0], {}, False)
         from repro.core import qmm as QE
 
-        xq, wq, colsum = _make_problem(key)
+        xq, wq, colsum = make_problem(key)
         timings: Dict[str, float] = {}
         for b in key.candidates:
             call = jax.jit(
@@ -316,9 +322,12 @@ class AutotuneCache:
             blob = json.load(f)
         if blob.get("version") != 1:
             raise ValueError(f"unsupported autotune cache version in {path}")
+        from repro.core import backend_registry
+
+        known = set(backend_registry.backend_names())
         loaded = 0
         for e in blob.get("entries", ()):
-            if e["backend"] not in BACKENDS:
+            if e["backend"] not in known:
                 continue
             key = TuneKey(
                 int(e["m"]),

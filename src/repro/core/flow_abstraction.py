@@ -121,6 +121,7 @@ def qmm_flow(
     int_matmul: Optional[Callable] = None,
     w_colsum: Optional[jax.Array] = None,
     out_dtype=jnp.float32,
+    recenter: bool = True,
 ) -> jax.Array:
     """Affine x affine QMM via the computation-flow abstraction.
 
@@ -131,18 +132,27 @@ def qmm_flow(
         ``(..., K, N)`` (act x act). ``scale``/``offset`` scalar or
         broadcastable to ``(1, N)`` (per-out-channel).
       int_matmul: integer MM backend ``f(x_int, w_int, x_bits, w_bits)``.
-      w_colsum: optional precomputed ``colsum`` of the right mantissa
-        (weight-stationary serving folds this offline).
+      w_colsum: optional precomputed ``colsum`` of the right mantissa *as the
+        integer core consumes it* — re-centered when ``recenter=True``
+        (``weight_corrections``), raw otherwise.  For 1-bit weights the two
+        coincide (re-centering is a no-op at bits <= 1).
       out_dtype: accumulation dtype of the full-precision epilogue.
+      recenter: shift multi-bit mantissas to the signed range before the
+        integer MM (exact — absorbed into the offsets).  Backends whose
+        integer core consumes raw unsigned mantissas (popcount/bit-serial
+        lanes; ``QMMBackend.needs_unsigned_mantissas``) pass ``False``: the
+        affine identity holds for either representation, so the epilogue is
+        shared verbatim.
 
     Returns:
       The full-precision product, shape ``(..., M, N)``.
     """
     int_matmul = int_matmul or default_int_matmul
-    # Re-center multi-bit mantissas to the signed range so the int8 MXU path
-    # applies at every precision (exact — absorbed into the offsets).
-    x = quantization.recenter(x)
-    w = quantization.recenter(w)
+    if recenter:
+        # Re-center multi-bit mantissas to the signed range so the int8 MXU
+        # path applies at every precision (exact — absorbed into the offsets).
+        x = quantization.recenter(x)
+        w = quantization.recenter(w)
     x1 = x.unpack().mantissa
     x2 = w.unpack().mantissa
     k = x1.shape[-1]

@@ -20,6 +20,17 @@ Backends for the integer MM core:
                    unpack -> MXU dot with VMEM tiling); falls back to
                    interpret mode off-TPU.
 
+* ``"fused"``    — one Pallas kernel running the whole bit-serial schedule
+                   (pack-plane AND-popcount, cross-plane accumulate, affine
+                   epilogue) without touching HBM between stages — the
+                   closest software analogue of BETA's fused datapath.
+
+Backends are *registered*, not hardcoded: each one is a
+``repro.core.backend_registry.QMMBackend`` spec (run callable + capability
+flags), and ``qmm(backend=...)`` resolves names through the registry.  This
+module registers ``mxu`` and ``popcount``; ``repro.kernels.ops`` registers
+``pallas`` and ``fused``.  Adding a backend elsewhere requires no edits here.
+
 All backends return results that agree exactly (integer math) and match the
 dequantized FP reference to fp32 rounding — property-tested.  Because the
 backends agree numerically, ``backend="auto"`` is free to pick whichever is
@@ -35,7 +46,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import flow_abstraction, packing
+from repro.core import backend_registry, flow_abstraction, packing
 from repro.core.precision import PrecisionMode
 from repro.core.quantization import QuantTensor
 
@@ -108,7 +119,8 @@ def qmm(
     Args:
       x: left operand ``(..., M, K)`` QuantTensor.
       w: right operand ``(K, N)`` or ``(..., K, N)`` QuantTensor.
-      backend: "auto" | "mxu" | "popcount" | "pallas".
+      backend: "auto" or any name registered in ``core.backend_registry``
+        ("mxu", "popcount", "pallas", "fused", ...).
       mode: optional PrecisionMode for engine-config asserts.
       w_colsum: precomputed integer colsum of the (re-centered) right mantissa.
       out_dtype: epilogue dtype.
@@ -135,34 +147,65 @@ def qmm(
         backend = dispatch.choose_backend(
             m, int(x_l[-1]), int(w_l[-1]), x.bits, w.bits, rank2=rank2
         )
-    if backend == "mxu":
-        return flow_abstraction.qmm_flow(
-            x, w, int_matmul=None, w_colsum=w_colsum, out_dtype=out_dtype
-        )
-    if backend == "popcount":
-        # Popcount path needs unsigned planes: bypass re-centering by running
-        # the flow abstraction on the raw mantissas with a popcount core.
-        return _qmm_flow_unsigned(x, w, popcount_int_matmul, out_dtype)
-    if backend == "pallas":
-        from repro.kernels import ops as kernel_ops  # lazy: avoid cycle
-
-        return kernel_ops.qmm_pallas(x, w, w_colsum=w_colsum, out_dtype=out_dtype)
-    raise ValueError(f"unknown backend {backend!r}")
+    spec = backend_registry.get_backend(backend)  # ValueError on unknown name
+    return spec.run(x, w, w_colsum=w_colsum, out_dtype=out_dtype)
 
 
-def _qmm_flow_unsigned(x: QuantTensor, w: QuantTensor, int_matmul, out_dtype):
-    """Flow abstraction without the signed re-centering (popcount path)."""
-    x1 = x.unpack(dtype=jnp.int32).mantissa
-    x2 = w.unpack(dtype=jnp.int32).mantissa
-    k = x1.shape[-1]
-    a1 = jnp.asarray(x.scale, out_dtype)
-    g1 = jnp.asarray(x.offset, out_dtype)
-    a2 = jnp.asarray(w.scale, out_dtype)
-    g2 = jnp.asarray(w.offset, out_dtype)
-    xy = int_matmul(x1, x2, x.bits, w.bits).astype(out_dtype)
-    out = xy * (a1 * a2)
-    row = jnp.sum(x1, axis=-1, dtype=jnp.int32)[..., None].astype(out_dtype)
-    out = out + (a1 * g2) * row
-    col = jnp.sum(x2, axis=-2, dtype=jnp.int32)[..., None, :].astype(out_dtype)
-    out = out + (g1 * a2) * col
-    return out + g1 * g2 * jnp.asarray(k, out_dtype)
+# ---------------------------------------------------------------------------
+# Built-in jnp backends (the Pallas-backed ones register in repro.kernels.ops)
+# ---------------------------------------------------------------------------
+
+
+def _mxu_traffic(m, k, n, act_bits, weight_bits) -> int:
+    # The MXU path consumes *unpacked* int8 mantissas: packed 1-bit weights
+    # are materialized to K x N int8 before the dot (that unpacked footprint
+    # is exactly what the fused kernel avoids).  XLA fuses the epilogue into
+    # the dot's consumer, so the output is written once.
+    return m * k + k * n + 4 * m * n + 8 * (m + n)
+
+
+def _popcount_traffic(m, k, n, act_bits, weight_bits) -> int:
+    # Bit-serial jnp path: each (i, j) plane pair re-reads plane i of the
+    # acts and plane j of the weights — act planes are fetched weight_bits
+    # times and vice versa (no cross-pair VMEM reuse outside a kernel).
+    kw_bytes = 4 * packing.packed_len(k, 1)
+    plane_reads = act_bits * weight_bits
+    return (
+        plane_reads * m * kw_bytes
+        + plane_reads * kw_bytes * n
+        + 4 * m * n
+        + 8 * (m + n)
+    )
+
+
+@backend_registry.register_backend(
+    "mxu",
+    description="int8 dot_general on the MXU, int32 accumulation",
+    traffic_model=_mxu_traffic,
+)
+def _run_mxu(x: QuantTensor, w: QuantTensor, *, w_colsum=None, out_dtype=jnp.float32):
+    return flow_abstraction.qmm_flow(
+        x, w, int_matmul=None, w_colsum=w_colsum, out_dtype=out_dtype
+    )
+
+
+@backend_registry.register_backend(
+    "popcount",
+    description="bit-serial AND-popcount over packed uint32 lanes (jnp)",
+    needs_unsigned_mantissas=True,
+    traffic_model=_popcount_traffic,
+)
+def _run_popcount(
+    x: QuantTensor, w: QuantTensor, *, w_colsum=None, out_dtype=jnp.float32
+):
+    # Popcount lanes consume raw unsigned planes: run the shared flow
+    # abstraction without re-centering.  A caller-supplied colsum is valid
+    # here only when re-centering is a no-op (1-bit weights).
+    return flow_abstraction.qmm_flow(
+        x,
+        w,
+        int_matmul=popcount_int_matmul,
+        w_colsum=w_colsum if w.bits == 1 else None,
+        out_dtype=out_dtype,
+        recenter=False,
+    )

@@ -1,0 +1,260 @@
+"""QMM backend roofline: place every registered backend against the roofs.
+
+The serving roofline (``benchmarks/roofline.py``) charges whole programs from
+dry-run HLO cost analysis; this module does the same accounting for a single
+QMM problem, per *backend*, using the registry as the source of truth:
+
+* the candidate set is ``backend_registry.backend_names()`` — a newly
+  registered backend shows up in the artifact with zero edits here;
+* each backend's HBM traffic comes from its registered ``traffic_model``
+  capability (falling back to :func:`default_traffic`, the packed-operand
+  floor, when a backend declares none);
+* the useful work is always ``2*M*K*N`` MAC-ops regardless of datapath —
+  that is the point of a roofline: the fused kernel and the MXU path do the
+  same logical matmul, they just pay different memory bills for it.
+
+Roofs (TPU v5e, per chip): 819 GB/s HBM; the int8 MXU peak is twice the
+197 TFLOP/s bf16 figure.  Measured wall-clock comes from the same
+best-of-``reps`` timer the autotuner uses, over the same synthetic problems
+(``dispatch.make_problem``) — so a cell's ``measured_us`` is directly
+comparable to the autotune cache's ``timings_us``.  On a CPU host the
+measured numbers are interpret-mode proxies and only the *model* columns
+(``t_memory_us`` / ``t_compute_us`` / ``bound``) transfer to the TPU; the
+artifact records the platform so readers can tell which regime they hold.
+
+``BENCH_qmm.json`` (schema ``qmm-roofline/v1``) is the perf-trajectory
+artifact for the QMM engine, the sibling of ``BENCH_serve.json``: CI
+regenerates a smoke variant and validates both against the schema, and
+validation requires every *currently registered* backend to appear — adding
+a backend without re-recording the artifact fails the build on purpose.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core import backend_registry, dispatch, packing
+
+__all__ = [
+    "SCHEMA",
+    "HBM_BW",
+    "PEAK_INT_OPS",
+    "DEFAULT_SHAPES",
+    "DEFAULT_PRECISIONS",
+    "SMOKE_SHAPES",
+    "SMOKE_PRECISIONS",
+    "default_traffic",
+    "cell_model",
+    "measure_cell",
+    "run_qmm_roofline",
+    "validate_qmm_bench",
+    "save_qmm_bench",
+    "load_qmm_bench",
+    "format_table",
+]
+
+SCHEMA = "qmm-roofline/v1"
+
+#: TPU v5e per-chip roofs (matches benchmarks/roofline.py HBM figure).
+HBM_BW = 819e9
+PEAK_INT_OPS = 394e12  # int8 MXU: 2x the 197 TFLOP/s bf16 peak
+
+#: (M, K, N): a prefill-shaped tile and a decode-shaped one, both small
+#: enough that the interpret-mode Pallas paths stay measurable off-TPU.
+DEFAULT_SHAPES: Tuple[Tuple[int, int, int], ...] = ((64, 512, 512), (8, 512, 512))
+#: (act_bits, weight_bits): the paper's W1A1 / W1A8 modes plus the A8xA8
+#: attention case.
+DEFAULT_PRECISIONS: Tuple[Tuple[int, int], ...] = ((1, 1), (8, 1), (8, 8))
+
+SMOKE_SHAPES: Tuple[Tuple[int, int, int], ...] = ((8, 128, 128),)
+SMOKE_PRECISIONS: Tuple[Tuple[int, int], ...] = ((1, 1), (8, 1), (8, 8))
+
+_CELL_NUMERIC_KEYS = (
+    "m",
+    "k",
+    "n",
+    "act_bits",
+    "weight_bits",
+    "flops",
+    "bytes",
+    "intensity",
+    "t_compute_us",
+    "t_memory_us",
+    "roof_us",
+    "measured_us",
+)
+
+
+def default_traffic(m: int, k: int, n: int, act_bits: int, weight_bits: int) -> int:
+    """Packed-operand HBM floor for a backend with no declared traffic model.
+
+    Both operands as 1-bit planes (the minimum any bit-serial datapath must
+    read), the fp32 result out, plus the rank-1 correction vectors.
+    """
+    kw_bytes = 4 * packing.packed_len(k, 1)
+    return (
+        act_bits * m * kw_bytes
+        + weight_bits * kw_bytes * n
+        + 4 * m * n
+        + 8 * (m + n)
+    )
+
+
+def cell_model(
+    backend: str, m: int, k: int, n: int, act_bits: int, weight_bits: int
+) -> Dict:
+    """The analytical half of one cell: traffic, intensity, both roofs."""
+    spec = backend_registry.get_backend(backend)
+    traffic = spec.traffic_model or default_traffic
+    nbytes = float(traffic(m, k, n, act_bits, weight_bits))
+    flops = 2.0 * m * k * n
+    t_compute = flops / PEAK_INT_OPS
+    t_memory = nbytes / HBM_BW
+    roof = max(t_compute, t_memory)
+    return {
+        "backend": backend,
+        "m": int(m),
+        "k": int(k),
+        "n": int(n),
+        "act_bits": int(act_bits),
+        "weight_bits": int(weight_bits),
+        "flops": flops,
+        "bytes": nbytes,
+        "intensity": flops / nbytes if nbytes else 0.0,
+        "t_compute_us": t_compute * 1e6,
+        "t_memory_us": t_memory * 1e6,
+        "roof_us": roof * 1e6,
+        "bound": "compute" if t_compute >= t_memory else "memory",
+    }
+
+
+def measure_cell(
+    backend: str,
+    m: int,
+    k: int,
+    n: int,
+    act_bits: int,
+    weight_bits: int,
+    *,
+    warmup: int = 1,
+    reps: int = 3,
+) -> Dict:
+    """One roofline cell: the model columns plus measured wall-clock.
+
+    Times ``qmm(backend=...)`` on the autotuner's synthetic problem for the
+    same key, so measured numbers line up with autotune-cache timings.
+    """
+    import functools
+
+    from repro.core import qmm as QE
+
+    cell = cell_model(backend, m, k, n, act_bits, weight_bits)
+    key = dispatch.TuneKey(m, k, n, act_bits, weight_bits, (backend,))
+    xq, wq, colsum = dispatch.make_problem(key)
+    call = jax.jit(functools.partial(QE.qmm, backend=backend, w_colsum=colsum))
+    secs = dispatch._wallclock_timer(
+        lambda: call(xq, wq), warmup=warmup, reps=reps
+    )
+    cell["measured_us"] = secs * 1e6
+    return cell
+
+
+def run_qmm_roofline(
+    shapes: Sequence[Tuple[int, int, int]] = DEFAULT_SHAPES,
+    precisions: Sequence[Tuple[int, int]] = DEFAULT_PRECISIONS,
+    backends: Optional[Iterable[str]] = None,
+    *,
+    warmup: int = 1,
+    reps: int = 3,
+) -> Dict:
+    """Measure every (backend x shape x precision) cell; returns the doc."""
+    names = tuple(backends) if backends else backend_registry.backend_names()
+    cells: List[Dict] = []
+    for m, k, n in shapes:
+        for ab, wb in precisions:
+            for b in names:
+                cells.append(
+                    measure_cell(b, m, k, n, ab, wb, warmup=warmup, reps=reps)
+                )
+    return {
+        "schema": SCHEMA,
+        "generated_unix": time.time(),
+        "platform": jax.default_backend(),
+        "hardware": {"hbm_bw": HBM_BW, "peak_int_ops": PEAK_INT_OPS},
+        "backends": list(names),
+        "cells": cells,
+    }
+
+
+def validate_qmm_bench(doc: Dict) -> Dict:
+    """Schema check; raises ValueError on any violation, returns ``doc``.
+
+    Requires every currently *registered* backend to appear in the cells —
+    an artifact recorded before a backend was added must be re-recorded.
+    """
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(
+            f"BENCH_qmm schema mismatch: got {doc.get('schema')!r}, want {SCHEMA!r}"
+        )
+    hw = doc.get("hardware")
+    if not isinstance(hw, dict) or not all(
+        isinstance(hw.get(k), (int, float)) for k in ("hbm_bw", "peak_int_ops")
+    ):
+        raise ValueError("BENCH_qmm 'hardware' must carry numeric roofs")
+    cells = doc.get("cells")
+    if not isinstance(cells, list) or not cells:
+        raise ValueError("BENCH_qmm 'cells' must be a non-empty list")
+    for i, c in enumerate(cells):
+        if not isinstance(c.get("backend"), str):
+            raise ValueError(f"BENCH_qmm cell {i} missing 'backend'")
+        if c.get("bound") not in ("compute", "memory"):
+            raise ValueError(f"BENCH_qmm cell {i} has invalid 'bound'")
+        for key in _CELL_NUMERIC_KEYS:
+            if not isinstance(c.get(key), (int, float)):
+                raise ValueError(f"BENCH_qmm cell {i} key {key!r} must be numeric")
+    covered = {c["backend"] for c in cells}
+    missing = set(backend_registry.backend_names()) - covered
+    if missing:
+        raise ValueError(
+            f"BENCH_qmm is stale: registered backends {sorted(missing)} have no "
+            "roofline cells — re-record with benchmarks/roofline.py --qmm-out"
+        )
+    return doc
+
+
+def save_qmm_bench(path: str, doc: Dict) -> None:
+    validate_qmm_bench(doc)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def load_qmm_bench(path: str) -> Dict:
+    with open(path) as f:
+        return validate_qmm_bench(json.load(f))
+
+
+def format_table(doc: Dict) -> str:
+    """Human-readable roofline placement, one line per cell."""
+    lines = [
+        f"# qmm roofline ({doc['platform']}; HBM {doc['hardware']['hbm_bw']:.0f} B/s,"
+        f" int peak {doc['hardware']['peak_int_ops']:.3g} op/s)",
+        "backend   M     K     N    A/W   bytes      AI       roof_us  bound    measured_us",
+    ]
+    for c in doc["cells"]:
+        lines.append(
+            f"{c['backend']:<9}{c['m']:<6}{c['k']:<6}{c['n']:<5}"
+            f"{c['act_bits']}/{c['weight_bits']:<4}"
+            f"{c['bytes']:<11.3g}{c['intensity']:<9.1f}"
+            f"{c['roof_us']:<9.3f}{c['bound']:<9}{c['measured_us']:.1f}"
+        )
+    return "\n".join(lines)

@@ -14,10 +14,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import flow_abstraction, packing, quantization
+from repro.core import backend_registry, flow_abstraction, packing, quantization
 from repro.core.quantization import QuantTensor
 from repro.kernels import binary_qmm as _bq
 from repro.kernels import bitserial_qmm as _bs
+from repro.kernels import fused_qmm as _fq
 from repro.kernels import popcount_qmm as _pq
 
 __all__ = [
@@ -26,6 +27,7 @@ __all__ = [
     "popcount_qmm_int",
     "bitserial_qmm_int",
     "qmm_pallas",
+    "qmm_fused",
 ]
 
 
@@ -163,6 +165,71 @@ def qmm_pallas(
     return _epilogue(x, w, xy, k, w_colsum, out_dtype)
 
 
+def qmm_fused(
+    x: QuantTensor,
+    w: QuantTensor,
+    *,
+    w_colsum: Optional[jax.Array] = None,
+    out_dtype=jnp.float32,
+    interpret: Optional[bool] = None,
+    block=_fq.DEFAULT_BLOCK,
+) -> jax.Array:
+    """QuantTensor QMM through the *fused* bit-serial kernel.
+
+    One Pallas pass does everything: packed planes in, AND-popcount
+    cross-plane accumulation, and the affine epilogue on-chip — the integer
+    MM never round-trips HBM (contrast ``qmm_pallas``, which stages the
+    integer result and applies the epilogue as a separate XLA computation).
+
+    ``w_colsum`` is accepted for signature parity with the other backends but
+    ignored: the kernel accumulates ``colsum(W)`` from the same packed planes
+    it is already popcounting, so a precomputed colsum saves nothing.
+    """
+    x_l = x.logical_shape
+    w_l = w.logical_shape
+    if len(w_l) != 2 or len(x_l) != 2:
+        raise ValueError("qmm_fused expects rank-2 operands; flatten batch dims")
+    del w_colsum  # computed in-kernel from the planes already on chip
+    m, k = x_l
+    n = w_l[-1]
+
+    # Raw unsigned mantissa planes (the popcount contract — no re-centering).
+    if x.packed and x.bits == 1:
+        a_planes = x.mantissa.astype(jnp.uint32)[None]  # (1, M, Kw)
+    else:
+        a_planes = packing.pack_bitplanes(
+            x.unpack(dtype=jnp.int32).mantissa.astype(jnp.uint32), x.bits, axis=-1
+        )
+    if w.packed and w.bits == 1:
+        b_planes = w.mantissa.astype(jnp.uint32)[None]  # (1, Kw, N)
+    else:
+        b_planes = packing.pack_bitplanes(
+            w.unpack(dtype=jnp.int32).mantissa.astype(jnp.uint32), w.bits, axis=-2
+        )
+
+    f32 = jnp.float32
+    a_scale = jnp.broadcast_to(jnp.asarray(x.scale, f32), (m, 1))
+    a_off = jnp.broadcast_to(jnp.asarray(x.offset, f32), (m, 1))
+    w_scale = jnp.broadcast_to(jnp.asarray(w.scale, f32), (1, n))
+    w_off = jnp.broadcast_to(jnp.asarray(w.offset, f32), (1, n))
+
+    bm, bn, bkw = block
+    a_p = _pad_to(_pad_to(a_planes, 1, bm), 2, bkw)
+    b_p = _pad_to(_pad_to(b_planes, 1, a_p.shape[2]), 2, bn)
+    out = _fq.fused_qmm(
+        a_p,
+        b_p,
+        _pad_to(a_scale, 0, bm),
+        _pad_to(a_off, 0, bm),
+        _pad_to(w_scale, 1, bn),
+        _pad_to(w_off, 1, bn),
+        k=k,
+        block=block,
+        interpret=_auto_interpret(interpret),
+    )[:m, :n]
+    return out if out_dtype == jnp.float32 else out.astype(out_dtype)
+
+
 def _epilogue(x, w, xy, k, w_colsum, out_dtype):
     """Flow-abstraction corrections on the kernel's integer MM output.
 
@@ -186,3 +253,68 @@ def _epilogue(x, w, xy, k, w_colsum, out_dtype):
     )
     out = out + (g1 * a2) * col[..., None, :].astype(out_dtype)
     return out + g1 * g2 * jnp.asarray(k, out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Backend registration — the Pallas-backed entries of the QMM registry.
+# (core.qmm registers the jnp backends "mxu" and "popcount".)
+# ---------------------------------------------------------------------------
+
+# Off-TPU the kernels run in interpret mode — a correctness fallback, not a
+# performance contender; only offer them on problems small enough that one
+# autotune timing probe stays cheap.
+_INTERPRET_MAX_MKN = 1 << 24
+
+
+def _interpret_probe(m: int, k: int, n: int) -> bool:
+    return on_tpu() or m * k * n <= _INTERPRET_MAX_MKN
+
+
+def _packed_operand_bytes(m, k, n, act_bits, weight_bits):
+    """HBM footprint of fully bit-plane-packed operands, in bytes."""
+    kw_bytes = 4 * packing.packed_len(k, 1)
+    return act_bits * m * kw_bytes, weight_bits * kw_bytes * n
+
+
+def _traffic_pallas(m, k, n, act_bits, weight_bits) -> int:
+    # Staged kernels: the int32 MM result round-trips HBM (write + read)
+    # before the XLA epilogue writes the fp32 output — 12 bytes/element of
+    # output traffic vs the fused kernel's 4.
+    if weight_bits == 1 and act_bits > 1:
+        a_bytes = m * k  # binary_qmm path: re-centered int8 activations
+        b_bytes = 4 * packing.packed_len(k, 1) * n
+    else:
+        a_bytes, b_bytes = _packed_operand_bytes(m, k, n, act_bits, weight_bits)
+    return a_bytes + b_bytes + 12 * m * n + 8 * (m + n)
+
+
+def _traffic_fused(m, k, n, act_bits, weight_bits) -> int:
+    # Packed planes fetched once, fp32 out written once — nothing staged.
+    a_bytes, b_bytes = _packed_operand_bytes(m, k, n, act_bits, weight_bits)
+    return a_bytes + b_bytes + 4 * m * n + 8 * (m + n)
+
+
+backend_registry.register(
+    backend_registry.QMMBackend(
+        name="pallas",
+        run=qmm_pallas,
+        description="staged Pallas kernels (binary/popcount/bitserial) "
+        "+ XLA flow epilogue",
+        rank2_only=True,
+        probe=_interpret_probe,
+        traffic_model=_traffic_pallas,
+    )
+)
+
+backend_registry.register(
+    backend_registry.QMMBackend(
+        name="fused",
+        run=qmm_fused,
+        description="one fused Pallas kernel: bit-serial AND-popcount core "
+        "+ on-chip affine epilogue",
+        rank2_only=True,
+        needs_unsigned_mantissas=True,
+        probe=_interpret_probe,
+        traffic_model=_traffic_fused,
+    )
+)

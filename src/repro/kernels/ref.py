@@ -18,7 +18,12 @@ import jax.numpy as jnp
 
 from repro.core import packing
 
-__all__ = ["binary_qmm_ref", "popcount_qmm_ref", "bitserial_qmm_ref"]
+__all__ = [
+    "binary_qmm_ref",
+    "popcount_qmm_ref",
+    "bitserial_qmm_ref",
+    "fused_qmm_ref",
+]
 
 
 def _packed_words(k: int) -> int:
@@ -107,3 +112,45 @@ def bitserial_qmm_ref(
             part = jnp.dot(ai, bj, preferred_element_type=jnp.int32) << (i + j)
             out = part if out is None else out + part
     return out
+
+
+def fused_qmm_ref(
+    a_planes: jax.Array,
+    b_planes: jax.Array,
+    a_scale: jax.Array,
+    a_offset: jax.Array,
+    w_scale: jax.Array,
+    w_offset: jax.Array,
+    k: int,
+) -> jax.Array:
+    """Oracle for ``fused_qmm``: bit-serial integer core + affine epilogue.
+
+    The integer part is exactly :func:`bitserial_qmm_ref`; the epilogue is
+    the flow abstraction on *unsigned* mantissas, evaluated in the same
+    elementwise fp32 expression order as the kernel.  The fused kernel
+    matches this oracle bit-exactly whenever the epilogue arithmetic is
+    exact (dyadic scales/offsets — see ``kernels.fused_qmm``); otherwise to
+    last-ulp fma-contraction differences.
+    """
+    xy = bitserial_qmm_ref(a_planes, b_planes, k)
+    a_bits = a_planes.shape[0]
+    b_bits = b_planes.shape[0]
+    row = None
+    col = None
+    for i in range(a_bits):
+        ai = packing.unpack_bits(a_planes[i], 1, k, axis=-1, dtype=jnp.int32)
+        part = jnp.sum(ai, axis=-1, keepdims=True, dtype=jnp.int32) << i
+        row = part if row is None else row + part
+    for j in range(b_bits):
+        bj = packing.unpack_bits(b_planes[j], 1, k, axis=-2, dtype=jnp.int32)
+        part = jnp.sum(bj, axis=-2, keepdims=True, dtype=jnp.int32) << j
+        col = part if col is None else col + part
+    a1 = a_scale.astype(jnp.float32)
+    g1 = a_offset.astype(jnp.float32)
+    a2 = w_scale.astype(jnp.float32)
+    g2 = w_offset.astype(jnp.float32)
+    t0 = xy.astype(jnp.float32) * (a1 * a2)
+    t1 = (a1 * g2) * row.astype(jnp.float32)
+    t2 = (g1 * a2) * col.astype(jnp.float32)
+    t3 = g1 * g2 * jnp.float32(k)
+    return ((t0 + t1) + t2) + t3

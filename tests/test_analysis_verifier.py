@@ -51,6 +51,17 @@ def test_bf16_accumulation_flagged(bad_kernel):
     assert "INV-ACCUM-LOWFP" in _rules(found)
 
 
+def test_pallas_kernel_lowfp_output_flagged(bad_kernel):
+    """The kernel-boundary arm of INV-ACCUM-LOWFP: a pallas_call fed packed
+    planes may exit int (counts) or f32 (fused epilogue) — never bf16."""
+    found = verifier.check_function(
+        bad_kernel.fused_kernel_lowfp,
+        _sds((8, 2), jnp.uint32),
+        _sds((8, 2), jnp.uint32),
+    )
+    assert "INV-ACCUM-LOWFP" in _rules(found)
+
+
 def test_low_precision_int_dot_flagged(bad_kernel):
     found = verifier.check_function(
         bad_kernel.int_dot_low_precision,
@@ -251,8 +262,19 @@ def test_arch_trace_records_named_sites():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("backend", ["mxu", "popcount", "pallas"])
+def _registered_backends():
+    from repro.core import backend_registry
+
+    return backend_registry.backend_names()
+
+
+@pytest.mark.parametrize("backend", _registered_backends())
 def test_backend_sweep_clean(backend):
+    """Every *registered* backend traces clean — enumerated from the
+    registry, so a new backend joins this sweep with zero test edits.
+    For "fused" this is the acceptance check that the packed planes flowing
+    into the pallas_call and the f32 epilogue exit satisfy the taint rules
+    (INV-PACKED-FLOAT, INV-ACCUM-LOWFP)."""
     from repro.analysis.findings import render_text
 
     found = verifier.verify_backends((backend,))

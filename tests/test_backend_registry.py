@@ -1,0 +1,148 @@
+"""Backend-registry contract: registration, capabilities, enumeration.
+
+The registry is the QMM engine's extension point — these tests pin the
+contract a third-party backend relies on: register by name, show up in
+every consumer (``qmm`` validation, ``QuantConfig``, autotune candidates,
+``dispatch.BACKENDS``), and disappear cleanly on unregister.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import QuantConfig
+from repro.core import backend_registry as BR
+from repro.core import dispatch
+from repro.core import qmm as QE
+from repro.core import quantization as Q
+
+RNG = np.random.default_rng(11)
+
+BUILTINS = ("mxu", "popcount", "pallas", "fused")
+
+
+def _quant_pair(m=8, k=64, n=16, act_bits=4):
+    x = jnp.asarray(RNG.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(RNG.standard_normal((k, n)).astype(np.float32))
+    return Q.quantize_activation(x, act_bits), Q.quantize_weight(w, 1)
+
+
+def _toy_run(x, w, *, w_colsum=None, out_dtype=jnp.float32):
+    # a "new" backend is allowed to delegate; identity is the name
+    return QE.qmm(x, w, backend="mxu", w_colsum=w_colsum, out_dtype=out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# enumeration of the built-ins
+# ---------------------------------------------------------------------------
+
+
+def test_builtins_register_in_candidate_order():
+    names = BR.backend_names()
+    assert tuple(names[:4]) == BUILTINS
+    specs = {s.name: s for s in BR.backend_specs()}
+    assert specs["fused"].rank2_only and specs["fused"].needs_unsigned_mantissas
+    assert specs["popcount"].needs_unsigned_mantissas
+    assert not specs["mxu"].rank2_only
+    # every built-in declares a traffic model for the roofline bench
+    for b in BUILTINS:
+        assert specs[b].traffic_model is not None
+
+
+def test_get_backend_unknown_name_lists_registered():
+    with pytest.raises(ValueError, match="registered backends: mxu"):
+        BR.get_backend("fpga")
+
+
+def test_qmm_rejects_unknown_backend_with_registry_names():
+    xq, wq = _quant_pair()
+    with pytest.raises(ValueError, match="unknown backend 'fpga'"):
+        QE.qmm(xq, wq, backend="fpga")
+
+
+# ---------------------------------------------------------------------------
+# registration round trip: a new backend reaches every consumer
+# ---------------------------------------------------------------------------
+
+
+def test_register_unregister_round_trip_reaches_all_consumers():
+    try:
+        BR.register_backend("toy", description="delegates to mxu")(_toy_run)
+        assert "toy" in BR.backend_names()
+        assert BR.get_backend("toy").run is _toy_run
+        # deprecated dynamic view follows the registry
+        assert "toy" in dispatch.BACKENDS
+        # config validation accepts it (and its error message would list it)
+        q = QuantConfig(backend="toy")
+        assert q.backend == "toy"
+        # autotune candidate with zero dispatcher edits
+        assert "toy" in dispatch.candidate_backends(8, 64, 16, 4, 1)
+        # and it actually runs through qmm()
+        xq, wq = _quant_pair()
+        np.testing.assert_array_equal(
+            np.asarray(QE.qmm(xq, wq, backend="toy")),
+            np.asarray(QE.qmm(xq, wq, backend="mxu")),
+        )
+    finally:
+        BR.unregister("toy")
+    assert "toy" not in BR.backend_names()
+    with pytest.raises(ValueError, match="unknown backend 'toy'"):
+        BR.get_backend("toy")
+    with pytest.raises(ValueError, match="unknown backend 'toy'"):
+        QuantConfig(backend="toy")
+
+
+def test_duplicate_and_reserved_names_rejected():
+    try:
+        BR.register_backend("toy")(_toy_run)
+        with pytest.raises(ValueError, match="already registered"):
+            BR.register_backend("toy")(_toy_run)
+    finally:
+        BR.unregister("toy")
+    for bad in ("", "auto"):
+        with pytest.raises(ValueError, match="invalid backend name"):
+            BR.register_backend(bad)(_toy_run)
+    BR.unregister("never-registered")  # no-op, not an error
+
+
+# ---------------------------------------------------------------------------
+# capability flags drive candidate filtering
+# ---------------------------------------------------------------------------
+
+
+def test_precision_capability_filters_candidates():
+    try:
+        BR.register_backend("w1a1only", precisions=frozenset({(1, 1)}))(_toy_run)
+        assert "w1a1only" in BR.candidate_names(8, 64, 16, 1, 1)
+        assert "w1a1only" not in BR.candidate_names(8, 64, 16, 8, 1)
+    finally:
+        BR.unregister("w1a1only")
+
+
+def test_rank2_and_probe_capabilities_filter_candidates():
+    try:
+        BR.register_backend(
+            "small2d", rank2_only=True, probe=lambda m, k, n: m * k * n <= 1024
+        )(_toy_run)
+        assert "small2d" in BR.candidate_names(4, 8, 8, 1, 1)
+        assert "small2d" not in BR.candidate_names(4, 8, 8, 1, 1, rank2=False)
+        assert "small2d" not in BR.candidate_names(64, 64, 64, 1, 1)
+    finally:
+        BR.unregister("small2d")
+
+
+def test_fused_is_an_autotune_candidate_and_keys_the_cache():
+    """The acceptance criterion: "fused" appears as a dispatchable autotune
+    candidate — in the eligible set, timed, and recorded in the cache key."""
+    from repro.kernels import ops
+
+    if not ops.on_tpu():
+        # off-TPU the interpret probe gates on problem size; use a small one
+        assert "fused" in dispatch.candidate_backends(8, 64, 16, 1, 1)
+    it = iter([4.0, 3.0, 2.0, 1.0])  # registry order: mxu, popcount, pallas, fused
+    cache = dispatch.AutotuneCache(timer=lambda fn: next(it))
+    assert cache.choose(8, 64, 16, 1, 1) == "fused"  # fake-timed winner
+    (key,) = cache.entries.keys()
+    assert "fused" in key.candidates
+    (rec,) = cache.entries.values()
+    assert "fused" in rec.timings_us

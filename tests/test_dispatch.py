@@ -34,8 +34,8 @@ def _fresh_default_cache():
 
 
 def seq_timer(values):
-    """Fake timer returning ``values`` in candidate order (mxu, popcount,
-    pallas when eligible) — determinizes the winner."""
+    """Fake timer returning ``values`` in registry candidate order (mxu,
+    popcount, then pallas/fused when eligible) — determinizes the winner."""
     it = iter(values)
 
     def timer(fn):
@@ -101,8 +101,9 @@ def test_phase_tags_split_prefill_and_decode():
 
 
 def test_fake_timer_winner_is_recorded():
-    # candidates at this tiny shape: (mxu, popcount, pallas); make popcount win
-    cache = dispatch.AutotuneCache(timer=seq_timer([10.0, 1.0, 5.0]))
+    # candidates at this tiny shape: (mxu, popcount, pallas, fused);
+    # make popcount win
+    cache = dispatch.AutotuneCache(timer=seq_timer([10.0, 1.0, 5.0, 7.0]))
     assert cache.choose(8, 64, 32, 1, 1) == "popcount"
     (rec,) = cache.entries.values()
     assert rec.timed and rec.backend == "popcount"
@@ -116,7 +117,7 @@ def test_fake_timer_winner_is_recorded():
 
 def test_auto_routes_through_default_cache_and_matches_mxu():
     cache = dispatch.reset_cache(
-        dispatch.AutotuneCache(timer=seq_timer([10.0, 1.0, 5.0] * 10))
+        dispatch.AutotuneCache(timer=seq_timer([10.0, 1.0, 5.0, 7.0] * 10))
     )
     xq, wq = _quant_pair(16, 64, 32, 1)
     out = QE.qmm(xq, wq, backend="auto")
@@ -180,7 +181,7 @@ def test_env_kill_switch_disables_tuning(monkeypatch):
 
 def test_persist_reload_round_trip_skips_retiming(tmp_path):
     path = str(tmp_path / "autotune.json")
-    cache = dispatch.AutotuneCache(timer=seq_timer([3.0, 1.0, 2.0] * 10))
+    cache = dispatch.AutotuneCache(timer=seq_timer([3.0, 1.0, 2.0, 4.0] * 10))
     first = cache.choose(8, 64, 32, 1, 1)
     cache.choose(8, 64, 64, 8, 1, tag="decode")
     cache.save(path)
@@ -210,7 +211,7 @@ def test_failed_tuning_falls_back_but_is_never_persisted(tmp_path):
     assert rec.failed and not rec.timed
     cache.save(path)
     assert json.load(open(path))["entries"] == []
-    fresh = dispatch.AutotuneCache(timer=seq_timer([3.0, 1.0, 2.0]))
+    fresh = dispatch.AutotuneCache(timer=seq_timer([3.0, 1.0, 2.0, 4.0]))
     fresh.load(path)
     assert fresh.choose(8, 64, 32, 1, 1) == "popcount"  # re-timed, not pinned
 

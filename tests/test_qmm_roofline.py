@@ -1,0 +1,79 @@
+"""BENCH_qmm schema + analytical roofline cells (no wall-clock timing here:
+CI's roofline smoke cell covers the measured path end-to-end)."""
+
+import os
+
+import pytest
+
+from repro.core import backend_registry as BR
+from repro.core import qmm_roofline as R
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _fake_doc(backends=None):
+    cells = [
+        dict(
+            R.cell_model(b, 8, 128, 128, 1, 1),
+            measured_us=1.0,
+        )
+        for b in (backends or BR.backend_names())
+    ]
+    return {
+        "schema": R.SCHEMA,
+        "generated_unix": 0.0,
+        "platform": "cpu",
+        "hardware": {"hbm_bw": R.HBM_BW, "peak_int_ops": R.PEAK_INT_OPS},
+        "backends": [c["backend"] for c in cells],
+        "cells": cells,
+    }
+
+
+def test_cell_model_uses_registry_traffic_models():
+    """The fused kernel's modeled traffic must undercut the staged pallas
+    path (the int32 MM round-trip is the whole point of fusing) and every
+    cell carries both roofs."""
+    shape = (64, 512, 512)
+    fused = R.cell_model("fused", *shape, 1, 1)
+    staged = R.cell_model("pallas", *shape, 1, 1)
+    assert fused["bytes"] < staged["bytes"]
+    assert fused["intensity"] > staged["intensity"]
+    for c in (fused, staged):
+        assert c["roof_us"] == max(c["t_compute_us"], c["t_memory_us"])
+        assert c["bound"] in ("compute", "memory")
+
+
+def test_cell_model_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown backend"):
+        R.cell_model("fpga", 8, 64, 64, 1, 1)
+
+
+def test_validate_accepts_complete_doc():
+    assert R.validate_qmm_bench(_fake_doc()) is not None
+
+
+def test_validate_rejects_schema_and_shape_violations():
+    doc = _fake_doc()
+    with pytest.raises(ValueError, match="schema mismatch"):
+        R.validate_qmm_bench(dict(doc, schema="qmm-roofline/v0"))
+    with pytest.raises(ValueError, match="non-empty"):
+        R.validate_qmm_bench(dict(doc, cells=[]))
+    broken = _fake_doc()
+    del broken["cells"][0]["bytes"]
+    with pytest.raises(ValueError, match="'bytes' must be numeric"):
+        R.validate_qmm_bench(broken)
+
+
+def test_validate_rejects_stale_artifact_missing_a_registered_backend():
+    """Adding a backend without re-recording BENCH_qmm.json must fail —
+    the artifact claims roofline placements for the whole registry."""
+    partial = _fake_doc(backends=[n for n in BR.backend_names() if n != "fused"])
+    with pytest.raises(ValueError, match="stale.*fused"):
+        R.validate_qmm_bench(partial)
+
+
+def test_committed_artifact_validates_against_current_registry():
+    path = os.path.join(REPO, "BENCH_qmm.json")
+    doc = R.load_qmm_bench(path)
+    covered = {c["backend"] for c in doc["cells"]}
+    assert covered >= set(BR.backend_names())
