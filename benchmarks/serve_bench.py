@@ -27,6 +27,7 @@ import jax
 from repro.configs import get_config, list_configs
 from repro.configs.smoke import smoke_variant
 from repro.models import model_zoo as Z
+from repro.runtime.faults import parse_fault_plan
 from repro.runtime.serve_loop import ServeEngine
 from repro.runtime.traffic import TrafficConfig, generate_requests, save_bench, summarize_bench
 
@@ -35,6 +36,7 @@ def run_bench(args) -> dict:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
+    plan = parse_fault_plan(args.fault_plan)
     params = Z.init_params(jax.random.PRNGKey(args.seed), cfg)
     serving = Z.prepare_serving_params(params, cfg)
     engine = ServeEngine(
@@ -44,6 +46,9 @@ def run_bench(args) -> dict:
         max_len=args.max_len,
         seed=args.seed,
         autotune_cache_path=args.autotune_cache,
+        fault_plan=plan,
+        snapshot_every=args.snapshot_every,
+        snapshot_dir=args.snapshot_dir,
     )
     tc = TrafficConfig(
         n_requests=args.n_requests,
@@ -51,18 +56,23 @@ def run_bench(args) -> dict:
         prompt_len=(args.prompt_min, args.prompt_max),
         new_tokens=(args.new_min, args.new_max),
         temperature=args.temperature,
+        deadline_s=args.deadline_s,
         seed=args.seed,
     )
     requests = generate_requests(tc, cfg.vocab_size)
 
     if args.warmup:
-        # compile prefill/decode outside the measured window
+        # compile prefill/decode outside the measured window — with faults
+        # suspended, so the chaos (and any demotion it triggers) lands
+        # entirely inside the measured run whose events feed availability
         warm = generate_requests(
             TrafficConfig(n_requests=1, rate_rps=0.0, prompt_len=tc.prompt_len,
                           new_tokens=(2, 2), seed=tc.seed + 1),
             cfg.vocab_size,
         )
+        engine.fault_plan = parse_fault_plan(None)
         engine.run(warm)
+        engine.fault_plan = plan
 
     t0 = time.perf_counter()
     done = engine.run(requests)
@@ -75,9 +85,16 @@ def run_bench(args) -> dict:
         "max_len": args.max_len,
         "quant_mode": cfg.quant.mode_name,
         "traffic": tc.to_dict(),
+        "fault_plan": plan.to_dict() if not plan.is_noop() else None,
     }
-    summary = summarize_bench(done, wall, config)
-    assert all(len(r.output) == r.max_new_tokens for r in done)
+    summary = summarize_bench(done, wall, config, events=engine.last_events)
+    # zero LOST requests: every request reaches a terminal state, and every
+    # successful one carries its full output (failures/deadline misses are
+    # recorded in the availability block, never dropped silently)
+    assert all(r.state in ("ok", "failed", "deadline") for r in done)
+    assert all(
+        len(r.output) == r.max_new_tokens for r in done if r.state == "ok"
+    )
     return summary
 
 
@@ -99,6 +116,14 @@ def main() -> None:
     ap.add_argument("--warmup", action="store_true", default=True)
     ap.add_argument("--no-warmup", dest="warmup", action="store_false")
     ap.add_argument("--autotune-cache", default=None)
+    ap.add_argument("--fault-plan", default=None,
+                    help="JSON FaultPlan (runtime.faults) for a chaos run, e.g. "
+                         "'{\"decode_fail_ticks\": [1]}'")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline (seconds from arrival)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot engine state every K decode ticks (0 = off)")
+    ap.add_argument("--snapshot-dir", default=None)
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 

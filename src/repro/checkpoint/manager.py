@@ -12,7 +12,13 @@ Durability contract (what survives a 1000-node failure):
 
 * **Atomicity**: writes go to ``step_X.tmp-<nonce>`` and are renamed into
   place after ``_COMMITTED`` lands — a host dying mid-save can never corrupt
-  a restore point (rename is atomic on POSIX).
+  a restore point (rename is atomic on POSIX).  Overwriting a committed step
+  renames the old dir aside (``step_X.old-<nonce>``) first and removes it
+  only after the new commit lands; a stranded aside is renamed back by
+  recovery at manager construction, so no crash point loses the step.
+* **Exotic dtypes**: ml_dtypes leaves (bfloat16, float8_*) are stored
+  bit-cast to same-width uints (npz would degrade them to raw void bytes)
+  and viewed back on restore — serving caches checkpoint losslessly.
 * **Keep-k**: older committed steps are pruned after a successful commit,
   never before.
 * **Elastic restore**: leaves are stored UNSHARDED from this single-host
@@ -85,25 +91,46 @@ def _flatten_with_paths(tree):
     return paths, leaves, treedef
 
 
+# npz silently degrades non-native dtypes (ml_dtypes: bfloat16, float8_*) to
+# raw void bytes; such leaves are stored bit-cast to a same-width uint and
+# viewed back on restore (serve caches are full of bf16 rows).
+_BITCAST_BY_ITEMSIZE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
+        self._recover()
 
     # ------------------------------------------------------------------
     def save(self, step: int, tree: Any, extras: Optional[dict] = None) -> str:
-        """Atomically persist ``tree`` (+ JSON-able ``extras``) for ``step``."""
+        """Atomically persist ``tree`` (+ JSON-able ``extras``) for ``step``.
+
+        Overwriting an existing committed step never opens a loss window:
+        the old directory is renamed ASIDE (``step_X.old-<nonce>``) before
+        the new one is renamed into place, and removed only after the new
+        commit lands.  A crash anywhere in between leaves either the final
+        dir or the aside dir committed; :meth:`_recover` (run at manager
+        construction) renames a stranded aside back into place.
+        """
         final = os.path.join(self.directory, f"step_{step:09d}")
         tmp = tempfile.mkdtemp(prefix=f"step_{step:09d}.tmp-", dir=self.directory)
+        old = None
         try:
             paths, leaves, _ = _flatten_with_paths(tree)
             arrays = {}
             meta = []
             for i, (p, leaf) in enumerate(zip(paths, leaves)):
                 arr = np.asarray(jax.device_get(leaf))
+                entry = {"path": p, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+                if arr.dtype.kind == "V":  # ml_dtypes leaf: store bit-cast
+                    store = arr.view(_BITCAST_BY_ITEMSIZE[arr.dtype.itemsize])
+                    entry["stored_as"] = str(store.dtype)
+                    arr = store
                 arrays[f"a{i}"] = arr
-                meta.append({"path": p, "dtype": str(arr.dtype), "shape": list(arr.shape)})
+                meta.append(entry)
             np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
             manifest = {
                 "step": step,
@@ -116,13 +143,43 @@ class CheckpointManager:
             with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
                 f.write("ok")
             if os.path.exists(final):
-                shutil.rmtree(final)
+                # rename aside, never rmtree-then-rename: a crash between
+                # those two would lose the only committed copy of this step
+                old = final + ".old-" + os.path.basename(tmp).rsplit(".tmp-", 1)[1]
+                os.rename(final, old)
             os.rename(tmp, final)
+            if old is not None:
+                shutil.rmtree(old, ignore_errors=True)
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
+            # an in-process failure between the two renames: put the old
+            # committed step back where readers look for it
+            if old is not None and os.path.exists(old) and not os.path.exists(final):
+                os.rename(old, final)
             raise
         self._prune()
         return final
+
+    # ------------------------------------------------------------------
+    def _recover(self) -> None:
+        """Repair the overwrite crash window: a committed ``step_X.old-*``
+        aside whose ``step_X`` is missing is renamed back into place (the
+        process died between the two renames of an overwrite); asides whose
+        final exists are leftovers of a crash after commit and are removed."""
+        for name in os.listdir(self.directory):
+            if ".old-" not in name:
+                continue
+            aside = os.path.join(self.directory, name)
+            final = os.path.join(self.directory, name.split(".old-", 1)[0])
+            if not _STEP_RE.match(os.path.basename(final)):
+                continue
+            if os.path.exists(os.path.join(final, "_COMMITTED")):
+                shutil.rmtree(aside, ignore_errors=True)
+            elif os.path.exists(os.path.join(aside, "_COMMITTED")):
+                shutil.rmtree(final, ignore_errors=True)  # uncommitted husk
+                os.rename(aside, final)
+            else:
+                shutil.rmtree(aside, ignore_errors=True)
 
     # ------------------------------------------------------------------
     def latest_step(self) -> Optional[int]:
@@ -157,7 +214,7 @@ class CheckpointManager:
         if like is None:
             raise ValueError("restore requires a template pytree (like=)")
         paths, leaves, treedef = _flatten_with_paths(like)
-        by_path = {m["path"]: a for m, a in zip(manifest["leaves"], arrays)}
+        by_path = {m["path"]: (m, a) for m, a in zip(manifest["leaves"], arrays)}
         out = []
         flat_shardings = (
             treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(leaves)
@@ -165,7 +222,9 @@ class CheckpointManager:
         for p, leaf, sh in zip(paths, leaves, flat_shardings):
             if p not in by_path:
                 raise KeyError(f"checkpoint missing leaf {p}")
-            arr = by_path[p]
+            entry, arr = by_path[p]
+            if "stored_as" in entry:  # bit-cast ml_dtypes leaf: view back
+                arr = arr.view(np.dtype(entry["dtype"]))
             want_dtype = leaf.dtype if hasattr(leaf, "dtype") else arr.dtype
             arr = arr.astype(want_dtype)
             if tuple(arr.shape) != tuple(leaf.shape):

@@ -61,6 +61,10 @@ __all__ = [
     "reset_cache",
     "tuning_phase",
     "current_phase",
+    "pin_demotion",
+    "clear_demotions",
+    "demotions",
+    "resolve_backend",
 ]
 
 #: Fallback when autotuning is disabled or a cache entry is missing.
@@ -103,6 +107,57 @@ def tuning_phase(tag: str):
         yield
     finally:
         _PHASE.reset(token)
+
+
+# ---------------------------------------------------------------------------
+# backend demotion (the serving degradation policy's dispatch hook)
+# ---------------------------------------------------------------------------
+
+# Process-wide demotion table: {failing backend -> known-good fallback}.
+# Pinned by the serving engine when a backend fails repeatedly (e.g. the
+# fused Pallas kernel refusing to lower off-TPU); consulted by ``qmm`` AFTER
+# name resolution, so it overrides explicit config names, per-layer
+# overrides, and autotune verdicts alike — the autotune cache itself is left
+# untouched (a demotion is an availability fact, not a timing verdict).
+_DEMOTIONS: Dict[str, str] = {}
+
+
+def pin_demotion(src: str, dst: str) -> None:
+    """Route every dispatch of ``src`` to ``dst`` for this process.
+
+    Both names must be registered; pinning a cycle (``dst`` already resolving
+    back to ``src``) is rejected — a demotion chain must terminate.
+    """
+    from repro.core import backend_registry
+
+    known = set(backend_registry.backend_names())
+    for name in (src, dst):
+        if name not in known:
+            raise ValueError(
+                f"cannot pin demotion {src!r} -> {dst!r}: unknown backend {name!r}"
+            )
+    if src == dst or resolve_backend(dst) == src:
+        raise ValueError(f"demotion {src!r} -> {dst!r} would form a cycle")
+    _DEMOTIONS[src] = dst
+
+
+def clear_demotions() -> None:
+    """Drop every pinned demotion (tests; operator-driven re-promotion)."""
+    _DEMOTIONS.clear()
+
+
+def demotions() -> Dict[str, str]:
+    """A copy of the active demotion table."""
+    return dict(_DEMOTIONS)
+
+
+def resolve_backend(name: str) -> str:
+    """Follow the demotion chain from ``name`` to its serving backend."""
+    seen = set()
+    while name in _DEMOTIONS and name not in seen:
+        seen.add(name)
+        name = _DEMOTIONS[name]
+    return name
 
 
 def _bucket_m(m: int) -> int:
@@ -385,9 +440,16 @@ def choose_backend(
     rank2: bool = True,
     cache: Optional[AutotuneCache] = None,
 ) -> str:
-    """Resolve "auto" for one QMM problem (the core.qmm entry point)."""
+    """Resolve "auto" for one QMM problem (the core.qmm entry point).
+
+    The returned name has demotions applied: a demoted backend's cached
+    timing verdict survives (re-promotion needs no re-timing) but is never
+    served while the pin is active.
+    """
     if not autotune_enabled():
-        return DEFAULT_BACKEND
-    return (cache or get_cache()).choose(
-        m, k, n, act_bits, weight_bits, tag=tag, rank2=rank2
+        return resolve_backend(DEFAULT_BACKEND)
+    return resolve_backend(
+        (cache or get_cache()).choose(
+            m, k, n, act_bits, weight_bits, tag=tag, rank2=rank2
+        )
     )

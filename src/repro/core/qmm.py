@@ -133,12 +133,12 @@ def qmm(
             raise ValueError(
                 f"operands W{w.bits}A{x.bits} do not match engine mode {mode.name}"
             )
+    from repro.core import dispatch
+
     if backend == "auto":
         # Measured dispatch (core.dispatch): look up — or time-and-record —
         # the winning backend for this (M, K, N, precisions, phase) key.
         # Under jax.jit this runs once at trace time (shapes are static).
-        from repro.core import dispatch
-
         x_l, w_l = x.logical_shape, w.logical_shape
         m = 1
         for d in x_l[:-1]:
@@ -147,6 +147,11 @@ def qmm(
         backend = dispatch.choose_backend(
             m, int(x_l[-1]), int(w_l[-1]), x.bits, w.bits, rank2=rank2
         )
+    else:
+        # Demotions override explicit names too: a backend the serving
+        # engine has pinned away from must not come back via a config
+        # literal or per-layer override while the pin is active.
+        backend = dispatch.resolve_backend(backend)
     spec = backend_registry.get_backend(backend)  # ValueError on unknown name
     return spec.run(x, w, w_colsum=w_colsum, out_dtype=out_dtype)
 

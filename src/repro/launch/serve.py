@@ -14,6 +14,27 @@ Two request sources:
 * open-loop traffic (``--traffic``): seeded Poisson arrivals with uniform
   prompt/output length ranges (runtime.traffic) — the serve_bench workload;
   add ``--bench-out`` to persist the BENCH_serve.json summary.
+
+Robustness knobs (docs/serving-robustness.md):
+
+* ``--fault-plan '{"decode_fail_ticks": [3]}'`` — inject a deterministic
+  failure schedule (runtime.faults.FaultPlan JSON) into the run.
+* ``--deadline-s 2.0`` — per-request deadline from arrival; expired
+  requests terminate with state "deadline" instead of holding a slot.
+* ``--snapshot-every 8 --snapshot-dir /tmp/serve-snap`` — checkpoint the
+  full engine state (queue, slot caches/cursors/budgets, sampler states)
+  every 8 decode ticks.
+
+Crash recovery — a killed process finishes its in-flight requests
+token-for-token identical to an uninterrupted run::
+
+  # serving process (killed mid-batch: SIGKILL, OOM, preemption, ...)
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
+      --requests 8 --max-new 24 --snapshot-every 4 --snapshot-dir /tmp/snap
+
+  # replacement process: same arch/seed/slots, --resume instead of a queue
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
+      --snapshot-dir /tmp/snap --resume
 """
 
 import argparse
@@ -25,6 +46,7 @@ import numpy as np
 from repro.configs import get_config, list_configs
 from repro.configs.smoke import smoke_variant
 from repro.models import model_zoo as Z
+from repro.runtime.faults import parse_fault_plan
 from repro.runtime.serve_loop import Request, ServeEngine
 from repro.runtime.traffic import (
     TrafficConfig,
@@ -55,7 +77,21 @@ def main() -> None:
     ap.add_argument("--rate", type=float, default=8.0)
     ap.add_argument("--bench-out", default=None,
                     help="write the BENCH_serve.json summary here")
+    # robustness knobs (docs/serving-robustness.md)
+    ap.add_argument("--fault-plan", default=None,
+                    help="JSON FaultPlan (runtime.faults) injected into the run")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline in seconds from arrival")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot engine state every K decode ticks (0 = off)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="CheckpointManager directory for engine snapshots")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume in-flight requests from --snapshot-dir instead "
+                         "of serving a fresh queue")
     args = ap.parse_args()
+    if args.resume and not args.snapshot_dir:
+        ap.error("--resume requires --snapshot-dir")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -82,35 +118,45 @@ def main() -> None:
         max_len=args.max_len,
         seed=args.seed,
         autotune_cache_path=args.autotune_cache,
+        fault_plan=parse_fault_plan(args.fault_plan),
+        snapshot_every=args.snapshot_every,
+        snapshot_dir=args.snapshot_dir,
     )
-    if args.traffic:
-        tc = TrafficConfig(
-            n_requests=args.requests,
-            rate_rps=args.rate,
-            prompt_len=(max(1, args.prompt_len // 2), args.prompt_len),
-            new_tokens=(max(1, args.max_new // 2), args.max_new),
-            temperature=args.temperature,
-            seed=args.seed,
-        )
-        reqs = generate_requests(tc, cfg.vocab_size)
+    if args.resume:
+        t0 = time.perf_counter()
+        done = engine.resume()
+        dt = time.perf_counter() - t0
     else:
-        reqs = [
-            Request(
-                prompt=rng.integers(0, cfg.vocab_size, size=(args.prompt_len,)).astype(
-                    np.int32
-                ),
-                max_new_tokens=args.max_new,
+        if args.traffic:
+            tc = TrafficConfig(
+                n_requests=args.requests,
+                rate_rps=args.rate,
+                prompt_len=(max(1, args.prompt_len // 2), args.prompt_len),
+                new_tokens=(max(1, args.max_new // 2), args.max_new),
                 temperature=args.temperature,
+                deadline_s=args.deadline_s,
+                seed=args.seed,
             )
-            for _ in range(args.requests)
-        ]
-    if args.stream:
-        for i, r in enumerate(reqs):
-            r.on_token = lambda tok, i=i: print(f"  [stream] req{i} -> {tok}")
+            reqs = generate_requests(tc, cfg.vocab_size)
+        else:
+            reqs = [
+                Request(
+                    prompt=rng.integers(
+                        0, cfg.vocab_size, size=(args.prompt_len,)
+                    ).astype(np.int32),
+                    max_new_tokens=args.max_new,
+                    temperature=args.temperature,
+                    deadline_s=args.deadline_s,
+                )
+                for _ in range(args.requests)
+            ]
+        if args.stream:
+            for i, r in enumerate(reqs):
+                r.on_token = lambda tok, i=i: print(f"  [stream] req{i} -> {tok}")
 
-    t0 = time.perf_counter()
-    done = engine.run(reqs)
-    dt = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        done = engine.run(reqs)
+        dt = time.perf_counter() - t0
     total_tokens = sum(len(r.output) for r in done)
     print(f"[serve] {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s incl. compile)")
@@ -122,6 +168,7 @@ def main() -> None:
             {"arch": args.arch, "smoke": bool(args.smoke),
              "batch_slots": args.slots, "max_len": args.max_len,
              "traffic": args.traffic},
+            events=engine.last_events,
         )
         save_bench(args.bench_out, summary)
         print(f"[serve] bench summary -> {args.bench_out} "

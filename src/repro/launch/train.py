@@ -103,7 +103,10 @@ def main() -> None:
     )
     runner.install_signal_handlers()
     start, params, opt = runner.try_restore(params, opt)
-    params, opt, hist = runner.run(params, opt, start)
+    try:
+        params, opt, hist = runner.run(params, opt, start)
+    finally:
+        runner.restore_signal_handlers()
     if hist:
         first, last = hist[0]["loss"], hist[-1]["loss"]
         print(f"[train] loss {first:.4f} -> {last:.4f} over {args.steps} steps")

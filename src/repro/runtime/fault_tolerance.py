@@ -66,16 +66,38 @@ class TrainingRunner:
         self.cfg = cfg
         self.log = log_fn
         self._preempted = False
+        self._prev_handlers: Dict[int, object] = {}
         self.step_times: List[float] = []
 
     # -- preemption ------------------------------------------------------
     def install_signal_handlers(self) -> None:
+        """Request a checkpoint-and-exit on SIGTERM/SIGINT.
+
+        The previous handlers are saved — and CHAINED: whatever the host
+        process had installed (an orchestrator's own drain logic, pytest's
+        KeyboardInterrupt machinery) still runs after the runner marks
+        itself preempted.  :meth:`restore_signal_handlers` puts the saved
+        handlers back; idempotent (a second install does not clobber the
+        saved originals with the runner's own handler).
+        """
+        if self._prev_handlers:
+            return  # already installed; keep the original saved handlers
+
         def handler(signum, frame):
             self.log(f"[runner] signal {signum}: checkpoint at next boundary")
             self._preempted = True
+            prev = self._prev_handlers.get(signum)
+            if callable(prev):  # chain (SIG_DFL/SIG_IGN are ints, not callables)
+                prev(signum, frame)
 
-        signal.signal(signal.SIGTERM, handler)
-        signal.signal(signal.SIGINT, handler)
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            self._prev_handlers[sig] = signal.signal(sig, handler)
+
+    def restore_signal_handlers(self) -> None:
+        """Reinstall the handlers that were active before ``install``."""
+        for sig, prev in self._prev_handlers.items():
+            signal.signal(sig, prev if prev is not None else signal.SIG_DFL)
+        self._prev_handlers = {}
 
     # -- resume ----------------------------------------------------------
     def try_restore(self, params, opt_state, shardings=None):

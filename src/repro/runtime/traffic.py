@@ -26,6 +26,7 @@ __all__ = [
     "TrafficConfig",
     "generate_requests",
     "summarize_bench",
+    "summarize_availability",
     "validate_bench",
     "save_bench",
     "load_bench",
@@ -33,9 +34,20 @@ __all__ = [
     "BENCH_REQUIRED_KEYS",
 ]
 
-BENCH_SCHEMA_VERSION = 1
-# contract checked by tests + the CI smoke cell
-BENCH_REQUIRED_KEYS = ("rps", "p50_ms", "p99_ms", "config")
+BENCH_SCHEMA_VERSION = 2
+# contract checked by tests + the CI smoke cells.  v2 adds "availability":
+# the perf trajectory records robustness (success rate, deadline misses,
+# retries, faults survived), not just latency.
+BENCH_REQUIRED_KEYS = ("rps", "p50_ms", "p99_ms", "config", "availability")
+
+#: event kinds (ServeEngine.last_events) counted as faults the run absorbed
+_FAULT_EVENT_KINDS = (
+    "step_fault",
+    "backend_fault",
+    "nan_logits",
+    "prefill_fault",
+    "snapshot_failed",
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +59,7 @@ class TrafficConfig:
     prompt_len: Tuple[int, int] = (4, 12)  # inclusive uniform range
     new_tokens: Tuple[int, int] = (4, 16)  # inclusive uniform range
     temperature: float = 0.0
+    deadline_s: Optional[float] = None  # per-request deadline from arrival
     seed: int = 0
 
     def to_dict(self) -> Dict:
@@ -75,6 +88,7 @@ def generate_requests(tc: TrafficConfig, vocab_size: int) -> List[Request]:
                 max_new_tokens=nnew,
                 temperature=tc.temperature,
                 arrival_s=float(arrivals[i]),
+                deadline_s=tc.deadline_s,
             )
         )
     return out
@@ -84,14 +98,63 @@ def _percentile_ms(xs: List[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs, np.float64), q) * 1e3) if xs else 0.0
 
 
+def _terminal_state(r: Request) -> str:
+    """The request's terminal state, tolerating pre-robustness callers that
+    hand-build requests without driving the engine's state machine."""
+    state = getattr(r, "state", None)
+    if state in ("ok", "failed", "deadline"):
+        return state
+    return "ok" if r.output else "failed"
+
+
+def summarize_availability(
+    requests: List[Request], events: Optional[List[Dict]] = None
+) -> Dict:
+    """The robustness block of BENCH_serve.json.
+
+    ``events`` is ``ServeEngine.last_events`` — the fault/retry/demotion
+    trace of the run.  "p99_under_faults_ms" is the p99 token latency of
+    THIS run; when the config carries a fault plan, that number is the
+    paper-thesis availability metric (tail latency while absorbing faults).
+    """
+    events = events or []
+    states = [_terminal_state(r) for r in requests]
+    n = len(requests)
+    n_ok = states.count("ok")
+    n_deadline = states.count("deadline")
+    lats: List[float] = []
+    for r in requests:
+        if r.token_times:
+            lats.append(r.token_times[0] - r.arrival_s)
+            lats.extend(np.diff(np.asarray(r.token_times)).tolist())
+    kinds = [e.get("kind") for e in events]
+    return {
+        "n_ok": n_ok,
+        "n_failed": states.count("failed"),
+        "n_deadline_missed": n_deadline,
+        "success_rate": (n_ok / n) if n else 1.0,
+        "deadline_miss_rate": (n_deadline / n) if n else 0.0,
+        "retries": int(sum(getattr(r, "retries", 0) for r in requests)),
+        "faults": sum(kinds.count(k) for k in _FAULT_EVENT_KINDS),
+        "demotions": kinds.count("demote"),
+        "snapshots": kinds.count("snapshot"),
+        "p99_under_faults_ms": _percentile_ms(lats, 99),
+    }
+
+
 def summarize_bench(
-    requests: List[Request], wall_s: float, config: Optional[Dict] = None
+    requests: List[Request],
+    wall_s: float,
+    config: Optional[Dict] = None,
+    events: Optional[List[Dict]] = None,
 ) -> Dict:
     """Condense a served request set into the BENCH_serve.json record.
 
     Token latency distribution = per-request time-to-first-token (from
     arrival, so queueing delay counts) plus every inter-token gap; ``rps``
-    is completed requests over the wall clock of the whole run.
+    is completed requests over the wall clock of the whole run.  Pass the
+    engine's ``last_events`` as ``events`` so the availability block can
+    count faults, retries, and backend demotions.
     """
     lats: List[float] = []
     ttfts: List[float] = []
@@ -116,6 +179,7 @@ def summarize_bench(
         "n_requests": len(requests),
         "n_tokens": n_tokens,
         "wall_s": wall_s,
+        "availability": summarize_availability(requests, events),
     }
 
 
@@ -128,6 +192,14 @@ def validate_bench(doc: Dict) -> Dict:
             raise ValueError(f"BENCH_serve.json key {k!r} must be numeric")
     if not isinstance(doc["config"], dict):
         raise ValueError("BENCH_serve.json 'config' must be an object")
+    avail = doc["availability"]
+    if not isinstance(avail, dict):
+        raise ValueError("BENCH_serve.json 'availability' must be an object")
+    for k in ("success_rate", "deadline_miss_rate", "retries"):
+        if not isinstance(avail.get(k), (int, float)):
+            raise ValueError(
+                f"BENCH_serve.json availability key {k!r} must be numeric"
+            )
     return doc
 
 

@@ -71,3 +71,107 @@ def test_elastic_restore_onto_different_mesh(tmp_path):
     }
     _, out, _ = m.restore(like=jax.tree.map(jnp.zeros_like, tree), shardings=sh)
     np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+
+
+# ---------------------------------------------------------------------------
+# overwrite atomicity: the rename-aside window (serving snapshots overwrite
+# the same step every boundary, so this path is hot)
+# ---------------------------------------------------------------------------
+
+
+def test_overwrite_replaces_content_without_residue(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=3)
+    m.save(1, _tree(1), extras={"v": 1})
+    m.save(1, _tree(2), extras={"v": 2})
+    step, out, extras = m.restore(like=jax.tree.map(jnp.zeros_like, _tree()))
+    assert step == 1 and extras["v"] == 2
+    for a, b in zip(jax.tree.leaves(_tree(2)), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    leftovers = [n for n in os.listdir(tmp_path) if ".old-" in n or ".tmp-" in n]
+    assert not leftovers, leftovers
+
+
+def test_overwrite_crash_between_renames_restores_old_step(tmp_path, monkeypatch):
+    """Fail the tmp->final rename of an overwrite: the previously committed
+    step must still be restorable (the old dir was renamed ASIDE, never
+    deleted, and the failure path renames it back)."""
+    import repro.checkpoint.manager as CM
+
+    m = CheckpointManager(str(tmp_path), keep=3)
+    t1 = _tree(1)
+    m.save(7, t1, extras={"v": 1})
+
+    real_rename = os.rename
+
+    def failing_rename(src, dst):
+        # let the aside rename (dst = step_X.old-*) through; crash only on
+        # the commit rename (dst = the final step dir)
+        if os.path.basename(dst) == "step_000000007":
+            raise OSError("injected crash between renames")
+        return real_rename(src, dst)
+
+    monkeypatch.setattr(CM.os, "rename", failing_rename)
+    with pytest.raises(OSError, match="injected crash"):
+        m.save(7, _tree(2), extras={"v": 2})
+    monkeypatch.undo()
+
+    m2 = CheckpointManager(str(tmp_path), keep=3)
+    step, out, extras = m2.restore(like=jax.tree.map(jnp.zeros_like, t1))
+    assert step == 7 and extras["v"] == 1
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not [n for n in os.listdir(tmp_path) if ".old-" in n]
+
+
+def test_recovery_renames_stranded_aside_back(tmp_path):
+    """Simulate a hard crash (no in-process handler) between the two renames:
+    only ``step_X.old-<nonce>`` exists on disk.  A new manager's recovery
+    pass renames it back into place."""
+    import shutil
+
+    m = CheckpointManager(str(tmp_path), keep=3)
+    t = _tree(3)
+    m.save(2, t, extras={"v": 3})
+    final = os.path.join(str(tmp_path), "step_000000002")
+    os.rename(final, final + ".old-deadbeef")
+    # plus an uncommitted husk of the new write that never finished
+    os.makedirs(final)
+    with open(os.path.join(final, "arrays.npz"), "wb") as f:
+        f.write(b"torn")
+
+    m2 = CheckpointManager(str(tmp_path), keep=3)
+    assert m2.latest_step() == 2
+    step, out, extras = m2.restore(like=jax.tree.map(jnp.zeros_like, t))
+    assert extras["v"] == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not [n for n in os.listdir(tmp_path) if ".old-" in n]
+
+    # inverse crash point: commit landed, aside removal didn't -> recovery
+    # deletes the stale aside and keeps the committed final
+    shutil.copytree(final, final + ".old-cafe0000")
+    m3 = CheckpointManager(str(tmp_path), keep=3)
+    assert m3.latest_step() == 2
+    assert not [n for n in os.listdir(tmp_path) if ".old-" in n]
+
+
+def test_exotic_dtype_leaves_roundtrip_exact_bits(tmp_path):
+    """bfloat16 (and other ml_dtypes) leaves must survive npz bit-exactly —
+    np.savez would silently degrade them to void bytes.  Serve-cache
+    snapshots are full of bf16 KV rows, so this is load-bearing for
+    crash recovery."""
+    bf16 = (jnp.arange(-8, 8, dtype=jnp.float32) / 3.0).astype(jnp.bfloat16)
+    tree = {
+        "kv": bf16.reshape(4, 4),
+        "q": jnp.arange(-8, 8, dtype=jnp.int8),
+        "pos": jnp.arange(4, dtype=jnp.int32),
+    }
+    m = CheckpointManager(str(tmp_path), keep=1)
+    m.save(1, tree)
+    _, out, _ = m.restore(like=jax.tree.map(jnp.zeros_like, tree))
+    assert out["kv"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(out["kv"]).view(np.uint16),
+        np.asarray(tree["kv"]).view(np.uint16),
+    )
+    np.testing.assert_array_equal(np.asarray(out["q"]), np.asarray(tree["q"]))

@@ -6,7 +6,6 @@ verifies the relaunched run continues from the checkpoint with the exact
 data cursor.
 """
 
-import json
 import os
 import signal
 import subprocess
@@ -124,3 +123,38 @@ def test_straggler_metrics_exposed(tmp_path):
     _, runner, params, opt, _, _ = _mini_setup(tmp_path, steps=6)
     runner.run(params, opt)
     assert runner.p50 > 0 and runner.p99 >= runner.p50
+
+
+def test_signal_handlers_chain_and_restore(tmp_path):
+    """install_signal_handlers must save, CHAIN, and restore whatever the
+    host process had installed — a runner that clobbers an orchestrator's
+    drain handler (or pytest's SIGINT machinery) breaks the host."""
+    _, runner, *_ = _mini_setup(tmp_path, steps=2)
+
+    chained = []
+
+    def host_handler(signum, frame):
+        chained.append(signum)
+
+    original = signal.signal(signal.SIGTERM, host_handler)
+    try:
+        runner.install_signal_handlers()
+        assert signal.getsignal(signal.SIGTERM) is not host_handler
+        # a second install must not clobber the SAVED originals with the
+        # runner's own handler (idempotence)
+        runner_handler = signal.getsignal(signal.SIGTERM)
+        runner.install_signal_handlers()
+        assert signal.getsignal(signal.SIGTERM) is runner_handler
+
+        signal.raise_signal(signal.SIGTERM)
+        assert runner._preempted  # the runner saw it...
+        assert chained == [signal.SIGTERM]  # ...and the host handler ran too
+
+        runner.restore_signal_handlers()
+        assert signal.getsignal(signal.SIGTERM) is host_handler
+        # restore is a reset: a later install re-saves the CURRENT handlers
+        chained.clear()
+        signal.raise_signal(signal.SIGTERM)
+        assert chained == [signal.SIGTERM]
+    finally:
+        signal.signal(signal.SIGTERM, original)

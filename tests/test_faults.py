@@ -1,0 +1,142 @@
+"""Fault-plan/injector units (host-only, no model compiles)."""
+
+import json
+
+import pytest
+
+from repro.runtime.faults import (
+    BackendFault,
+    FaultInjector,
+    FaultPlan,
+    InjectedFault,
+    parse_fault_plan,
+)
+
+
+def test_default_plan_is_noop():
+    plan = FaultPlan()
+    assert plan.is_noop()
+    inj = FaultInjector(plan)
+    for t in range(10):
+        inj.before_decode(t)
+    inj.before_prefill(0)
+    inj.on_snapshot(0)
+    assert inj.injected == 0
+
+
+def test_parse_round_trip():
+    plan = FaultPlan(
+        decode_fail_ticks=(1, 3),
+        backend_fail={"fused": 2},
+        nan_ticks={2: 1},
+        delay_ticks={4: 0.25},
+        prefill_fail_rids={7: 1},
+        snapshot_fail_at=(0,),
+    )
+    assert not plan.is_noop()
+    # to_dict -> JSON -> parse is identity (CLI --fault-plan path)
+    again = parse_fault_plan(json.dumps(plan.to_dict()))
+    assert again == plan
+
+
+def test_parse_accepts_none_plan_and_dict():
+    assert parse_fault_plan(None) == FaultPlan()
+    plan = FaultPlan(decode_fail_ticks=(5,))
+    assert parse_fault_plan(plan) is plan
+    assert parse_fault_plan({"decode_fail_ticks": [5]}) == plan
+
+
+def test_parse_rejects_unknown_keys_and_non_objects():
+    with pytest.raises(ValueError, match="unknown fault plan keys"):
+        parse_fault_plan({"decode_fail_tickz": [1]})
+    with pytest.raises(ValueError, match="JSON object"):
+        parse_fault_plan("[1, 2]")
+    # mapping-valued fields reject list-shaped JSON with an actionable error
+    # (a raw AttributeError from .items() is useless at the CLI surface)
+    with pytest.raises(ValueError, match="nan_ticks"):
+        parse_fault_plan({"nan_ticks": [2]})
+    with pytest.raises(ValueError, match="backend_fail"):
+        parse_fault_plan('{"backend_fail": ["fused"]}')
+
+
+def test_tick_fault_is_one_shot():
+    """A tick-keyed fault is transient: the retry of the SAME tick succeeds."""
+    inj = FaultInjector(FaultPlan(decode_fail_ticks=(3,)))
+    for t in range(3):
+        inj.before_decode(t)
+    with pytest.raises(InjectedFault):
+        inj.before_decode(3)
+    inj.before_decode(3)  # retry: clean
+    assert inj.injected == 1
+
+
+def test_attempt_faults_model_persistent_failure():
+    """Attempt-keyed faults count retries too — a run of ordinals keeps a
+    tick failing through every retry (persistent failure)."""
+    inj = FaultInjector(FaultPlan(decode_fail_attempts=(0, 1, 2)))
+    for _ in range(3):
+        with pytest.raises(InjectedFault):
+            inj.before_decode(0)
+    inj.before_decode(0)  # attempt 3: budget exhausted
+    assert inj.injected == 3
+
+
+def test_backend_fault_counts_down_and_respects_demotion():
+    inj = FaultInjector(FaultPlan(backend_fail={"fused": 2}))
+    with pytest.raises(BackendFault) as ei:
+        inj.before_decode(0)
+    assert ei.value.backend == "fused"
+    # once the engine demotes the backend, its faults stop firing
+    inj.before_decode(0, demoted={"fused": "mxu"})
+    with pytest.raises(BackendFault):
+        inj.before_decode(1)
+    inj.before_decode(2)  # count exhausted
+    assert inj.injected == 2
+
+
+def test_corrupt_logits_nans_one_row_once():
+    import numpy as np
+
+    inj = FaultInjector(FaultPlan(nan_ticks={1: 0}))
+    logits = np.zeros((2, 4), np.float32)
+    clean = inj.corrupt_logits(0, logits)
+    assert np.isfinite(clean).all()
+    hit = inj.corrupt_logits(1, logits)
+    assert np.isnan(hit[0]).all() and np.isfinite(hit[1]).all()
+    assert np.isfinite(logits).all()  # never in place
+    again = inj.corrupt_logits(1, logits)  # one-shot: retry decodes clean
+    assert np.isfinite(again).all()
+
+
+def test_prefill_and_snapshot_hooks():
+    inj = FaultInjector(FaultPlan(prefill_fail_rids={4: 1}, snapshot_fail_at=(1,)))
+    inj.before_prefill(3)
+    with pytest.raises(InjectedFault):
+        inj.before_prefill(4)
+    inj.before_prefill(4)  # count exhausted -> re-admission succeeds
+    inj.on_snapshot(0)
+    with pytest.raises(InjectedFault):
+        inj.on_snapshot(1)
+    inj.on_snapshot(1)  # one-shot
+
+
+def test_delay_hook_sleeps_via_injected_clock():
+    slept = []
+    inj = FaultInjector(
+        FaultPlan(delay_ticks={2: 0.5}, every_tick_delay_s=0.1),
+        sleep=slept.append,
+    )
+    inj.before_decode(0)
+    inj.before_decode(1)
+    inj.before_decode(2)
+    assert slept == [pytest.approx(0.1), pytest.approx(0.1), pytest.approx(0.6)]
+
+
+def test_sample_is_deterministic_in_seed():
+    a = FaultPlan.sample(7, horizon=100, p_decode_fail=0.2, p_nan=0.1, max_delay_s=0.5)
+    b = FaultPlan.sample(7, horizon=100, p_decode_fail=0.2, p_nan=0.1, max_delay_s=0.5)
+    c = FaultPlan.sample(8, horizon=100, p_decode_fail=0.2, p_nan=0.1, max_delay_s=0.5)
+    assert a == b
+    assert a != c
+    assert not a.is_noop()
+    assert all(0 <= t < 100 for t in a.decode_fail_ticks)

@@ -5,13 +5,14 @@ import json
 import numpy as np
 import pytest
 
-from repro.runtime.serve_loop import Request
+from repro.runtime.serve_loop import STATE_DEADLINE, STATE_FAILED, STATE_OK, Request
 from repro.runtime.traffic import (
     BENCH_REQUIRED_KEYS,
     TrafficConfig,
     generate_requests,
     load_bench,
     save_bench,
+    summarize_availability,
     summarize_bench,
     validate_bench,
 )
@@ -75,13 +76,82 @@ def test_bench_summary_schema_and_roundtrip(tmp_path):
     assert load_bench(str(path)) == doc
 
 
+def _avail():
+    return {"success_rate": 1.0, "deadline_miss_rate": 0.0, "retries": 0}
+
+
 def test_bench_validation_rejects_bad_docs():
     with pytest.raises(ValueError, match="missing"):
         validate_bench({"rps": 1.0})
     with pytest.raises(ValueError, match="numeric"):
-        validate_bench({"rps": "fast", "p50_ms": 1, "p99_ms": 2, "config": {}})
+        validate_bench(
+            {"rps": "fast", "p50_ms": 1, "p99_ms": 2, "config": {},
+             "availability": _avail()}
+        )
     with pytest.raises(ValueError, match="object"):
-        validate_bench({"rps": 1, "p50_ms": 1, "p99_ms": 2, "config": "x"})
+        validate_bench(
+            {"rps": 1, "p50_ms": 1, "p99_ms": 2, "config": "x",
+             "availability": _avail()}
+        )
+    # schema v2: the availability block is required and typed
+    with pytest.raises(ValueError, match="missing"):
+        validate_bench({"rps": 1, "p50_ms": 1, "p99_ms": 2, "config": {}})
+    with pytest.raises(ValueError, match="availability"):
+        validate_bench(
+            {"rps": 1, "p50_ms": 1, "p99_ms": 2, "config": {},
+             "availability": "fine"}
+        )
+    with pytest.raises(ValueError, match="success_rate"):
+        validate_bench(
+            {"rps": 1, "p50_ms": 1, "p99_ms": 2, "config": {},
+             "availability": {"deadline_miss_rate": 0.0, "retries": 0}}
+        )
+
+
+def test_availability_summary_counts_states_and_events():
+    reqs = _served_requests()
+    reqs[0].state = STATE_OK
+    reqs[1].state = STATE_OK
+    reqs[2].state = STATE_FAILED
+    reqs[2].retries = 3
+    reqs[2].output = []
+    reqs[2].token_times = []
+    reqs[3].state = STATE_DEADLINE
+    reqs[3].retries = 1
+    events = [
+        {"kind": "step_fault", "t": 0.1},
+        {"kind": "retry_tick", "t": 0.1},
+        {"kind": "nan_logits", "t": 0.2, "rid": 2},
+        {"kind": "demote", "t": 0.3, "from": "fused", "to": "mxu"},
+        {"kind": "snapshot", "t": 0.4, "tick": 4},
+        {"kind": "decode_tick", "t": 0.5},
+    ]
+    avail = summarize_availability(reqs, events)
+    assert avail["n_ok"] == 2
+    assert avail["n_failed"] == 1
+    assert avail["n_deadline_missed"] == 1
+    assert avail["success_rate"] == pytest.approx(0.5)
+    assert avail["deadline_miss_rate"] == pytest.approx(0.25)
+    assert avail["retries"] == 4
+    assert avail["faults"] == 2  # step_fault + nan_logits, not retries/ticks
+    assert avail["demotions"] == 1
+    assert avail["snapshots"] == 1
+    assert avail["p99_under_faults_ms"] > 0
+
+
+def test_availability_rides_in_bench_summary():
+    summary = summarize_bench(
+        _served_requests(), wall_s=2.0, config={"arch": "x"},
+        events=[{"kind": "step_fault", "t": 0.1}],
+    )
+    validate_bench(summary)
+    avail = summary["availability"]
+    # hand-built requests never drove the engine state machine: the
+    # output-presence fallback counts them all ok
+    assert avail["success_rate"] == 1.0 and avail["n_ok"] == 4
+    assert avail["faults"] == 1
+    # availability block round-trips through plain JSON
+    assert json.loads(json.dumps(avail)) == avail
 
 
 def test_traffic_config_json_serializable():
