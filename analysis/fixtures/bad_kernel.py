@@ -42,6 +42,15 @@ def fused_kernel_lowfp(a_packed, b_packed):
     )(a_packed, b_packed)
 
 
+def binary_attn_lowfp(q_planes, k_planes):
+    """INV-ACCUM-LOWFP on the attention-scores path: AND-popcount counts
+    over packed rank-4 Q/K bit-planes accumulated through bfloat16 instead
+    of int32 with an f32 epilogue exit."""
+    joint = q_planes[:, :, :, None, :] & k_planes[:, :, None, :, :]
+    counts = lax.population_count(joint)
+    return jnp.sum(counts.astype(jnp.bfloat16), axis=-1)
+
+
 def int_dot_low_precision(a, b):
     """INV-INT-DOT: int8 x int8 dot without preferred_element_type=int32
     accumulates in int8 and wraps after 128 / 127."""

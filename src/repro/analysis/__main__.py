@@ -97,6 +97,11 @@ def _collect(args):
         archs = tuple(a for a in args.archs.split(",") if a) or None
         all_findings.extend(verifier.verify_backends(backends))
         all_findings.extend(verifier.verify_archs(archs))
+        if backends is None and archs is None:
+            # full sweep: also trace the bitwise-attention engagement (the
+            # scores backend family has its own calling convention, and
+            # bit-bert-base is encoder-family so the arch sweep skips it)
+            all_findings.extend(verifier.verify_binary_attention())
     return all_findings
 
 

@@ -67,6 +67,16 @@ def run(repo_root: str) -> List[str]:
             lambda: verifier.check_function(K.fused_kernel_lowfp, u32, u32),
         ),
         (
+            # the attention-shaped variant: rank-4 packed planes, the score
+            # accumulation rounded through bfloat16
+            "INV-ACCUM-LOWFP",
+            lambda: verifier.check_function(
+                K.binary_attn_lowfp,
+                jax.ShapeDtypeStruct((1, 2, 4, 2), jnp.uint32),
+                jax.ShapeDtypeStruct((1, 2, 3, 2), jnp.uint32),
+            ),
+        ),
+        (
             "INV-INT-DOT",
             lambda: verifier.check_function(
                 K.int_dot_low_precision,
@@ -106,4 +116,21 @@ def run(repo_root: str) -> List[str]:
         failures.append(
             f"fused kernel jaxpr not clean: {f.rule} {f.message}"
         )
+
+    # ---- same for the real bitwise-attention cores: every scores-family
+    # backend consumes packed planes and exits int32 counts, cleanly ----
+    import functools
+
+    from repro.core import backend_registry
+
+    q = jax.ShapeDtypeStruct((1, 4, 6, 2), jnp.uint32)
+    k = jax.ShapeDtypeStruct((1, 2, 5, 2), jnp.uint32)
+    for name in backend_registry.backend_names(family="scores"):
+        spec = backend_registry.get_backend(name)
+        for f in verifier.check_function(
+            functools.partial(spec.run_scores, dh=48), q, k, name=f"scores:{name}"
+        ):
+            failures.append(
+                f"scores core {name} jaxpr not clean: {f.rule} {f.message}"
+            )
     return failures

@@ -56,6 +56,7 @@ __all__ = [
     "check_function",
     "check_cache_contract",
     "verify_backends",
+    "verify_binary_attention",
     "verify_arch",
     "verify_archs",
     "DEFAULT_ARCHS",
@@ -484,10 +485,12 @@ def _backend_cases(backend: str):
 def verify_backends(backends: Optional[Sequence[str]] = None) -> List[Finding]:
     """Taint-walk every registered QMM backend across the QMM-type grid.
 
-    The sweep enumerates ``core.backend_registry`` — a newly registered
-    backend is verified with zero edits here."""
+    The sweep enumerates the registry's qmm family — a newly registered
+    QMM backend is verified with zero edits here.  Scores-family backends
+    have a different calling convention and are covered by
+    :func:`verify_binary_attention`."""
     out: List[Finding] = []
-    for backend in backends or backend_registry.backend_names():
+    for backend in backends or backend_registry.backend_names(family="qmm"):
         for case, fn, args in _backend_cases(backend):
             out.extend(
                 check_function(fn, *args, name=f"backend:{backend}:{case}")
@@ -512,6 +515,16 @@ def _default_archs() -> Tuple[str, ...]:
 
 # resolved lazily so importing the verifier doesn't import every config
 DEFAULT_ARCHS: Tuple[str, ...] = ()
+
+
+def _scores_only_backend(name: str) -> bool:
+    """Is ``name`` a scores-family-only backend (a bitwise-attention
+    engagement when it appears on an attn site record)?"""
+    try:
+        spec = backend_registry.get_backend(name)
+    except (KeyError, ValueError):
+        return False
+    return "scores" in spec.families and "qmm" not in spec.families
 
 
 def _site_findings(sites: Sequence[dict], cfg, trace_name: str) -> List[Finding]:
@@ -561,24 +574,44 @@ def _site_findings(sites: Sequence[dict], cfg, trace_name: str) -> List[Finding]
                     "bits; wider precisions use int32",
                 )
         elif kind == "attn":
-            if bits != cfg.quant.attn_act_bits:
-                add(
-                    "INV-SITE-BITS",
-                    site,
-                    f"attention act x act QMM ran at {bits} bits but "
-                    f"attn_act_bits={cfg.quant.attn_act_bits}",
-                    "the act x act precision is a single engine mode knob "
-                    "(QuantConfig.attn_act_bits)",
+            if _scores_only_backend(s.get("backend", "auto")):
+                # bitwise engagement: the site elastically binarizes Q to
+                # 1 bit by family contract, whatever attn_act_bits says
+                if bits != 1:
+                    add(
+                        "INV-SITE-BITS",
+                        site,
+                        f"bitwise attention site ran at {bits} bits; a "
+                        "scores-family engagement binarizes to exactly 1",
+                        "scores backends consume packed 1-bit planes — the "
+                        "site must quantize with bits=1",
+                    )
+                expected = "uint8"
+                hint = (
+                    "elastic binarization stores {0,1} uint8 mantissas; "
+                    "re-centering does not apply at 1 bit"
                 )
-            expected = "int8" if (bits or 0) > 1 else "uint8"
+            else:
+                if bits != cfg.quant.attn_act_bits:
+                    add(
+                        "INV-SITE-BITS",
+                        site,
+                        f"attention act x act QMM ran at {bits} bits but "
+                        f"attn_act_bits={cfg.quant.attn_act_bits}",
+                        "the act x act precision is a single engine mode knob "
+                        "(QuantConfig.attn_act_bits)",
+                    )
+                expected = "int8" if (bits or 0) > 1 else "uint8"
+                hint = (
+                    "Q.recenter must run before the integer attention MM "
+                    "so mantissas fit the int8 MXU path"
+                )
             if mdt != expected:
                 add(
                     "INV-SITE-MANTISSA",
                     site,
-                    f"attention site mantissa dtype {mdt}, expected "
-                    f"{expected} (re-centered signed form)",
-                    "Q.recenter must run before the integer attention MM "
-                    "so mantissas fit the int8 MXU path",
+                    f"attention site mantissa dtype {mdt}, expected {expected}",
+                    hint,
                 )
     return out
 
@@ -640,3 +673,113 @@ def verify_archs(names: Optional[Sequence[str]] = None) -> List[Finding]:
     for name in names or _default_archs():
         out.extend(verify_arch(name))
     return out
+
+
+# ---------------------------------------------------------------------------
+# bitwise-attention sweep (scores backend family)
+# ---------------------------------------------------------------------------
+
+
+def verify_binary_attention() -> List[Finding]:
+    """Taint-walk the bitwise-attention path: every scores-family core, plus
+    prefill/decode of the 1-bit encoder arch with ``attn.qk -> "binary"``.
+
+    The scores family has its own calling convention (packed rank-4 planes
+    in, int32 counts out), so :func:`verify_backends` cannot sweep it; and
+    bit-bert-base is encoder-family (the serving arch sweep skips it), so
+    the model traces run here directly.  Site assertions: every ``attn.qk``
+    record must carry the binary engagement at exactly 1 bit, and the packed
+    K cache must round-trip the cache contract.
+    """
+    import dataclasses
+    import functools
+
+    findings: List[Finding] = []
+
+    # ---- every registered scores core keeps the packed/counts taints ----
+    q_sds = _sds((1, 4, 6, 2), jnp.uint32)  # (B, H, S, dw) — dh = 48
+    k_sds = _sds((1, 2, 5, 2), jnp.uint32)  # (B, G, T, dw), GQA G < H
+    for name in backend_registry.backend_names(family="scores"):
+        spec = backend_registry.get_backend(name)
+        findings.extend(
+            check_function(
+                functools.partial(spec.run_scores, dh=48),
+                q_sds,
+                k_sds,
+                name=f"scores:{name}",
+            )
+        )
+
+    # ---- model traces with the binary engagement ----
+    from repro.configs import get_config
+    from repro.configs.smoke import smoke_variant
+    from repro.models import model_zoo as Z
+
+    base = smoke_variant(get_config("bit-bert-base"))
+    cfg = dataclasses.replace(
+        base,
+        quant=dataclasses.replace(
+            base.quant, backend_overrides=(("attn.qk", "binary"),)
+        ),
+    )
+
+    key = _sds((2,), jnp.uint32)
+    sp = jax.eval_shape(
+        lambda k: Z.prepare_serving_params(Z.init_params(k, cfg), cfg), key
+    )
+    init_cache = jax.eval_shape(lambda: Z.init_cache(_B, _T, cfg))
+
+    def trace(trace_name: str, fn, *args) -> None:
+        with site_log.recording() as sites:
+            closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*args)
+        walk = _TaintWalk(trace_name)
+        walk.walk(closed.jaxpr, _seed_taints(closed.jaxpr, ()))
+        findings.extend(walk.findings)
+        findings.extend(_compare_cache(init_cache, out_shape[1], trace_name))
+        findings.extend(_site_findings(sites, cfg, trace_name))
+        qk = [s for s in sites if s.get("site") == "attn.qk"]
+        path = f"jaxpr:{trace_name}"
+        if not qk:
+            findings.append(
+                Finding(
+                    rule="INV-SITE-NAME",
+                    path=path,
+                    line=0,
+                    symbol="attn.qk",
+                    message="binary-attention trace recorded no attn.qk site",
+                    hint="the override did not engage — check "
+                    "QuantConfig.backend_for and _binary_scores_site",
+                )
+            )
+        for s in qk:
+            if s.get("backend") != "binary" or s.get("bits") != 1:
+                findings.append(
+                    Finding(
+                        rule="INV-SITE-BITS",
+                        path=path,
+                        line=0,
+                        symbol="attn.qk",
+                        message="attn.qk record is not the binary engagement "
+                        f"(backend={s.get('backend')!r}, bits={s.get('bits')})",
+                        hint="backend_overrides=(('attn.qk', 'binary'),) must "
+                        "reach the site and binarize to 1 bit",
+                    )
+                )
+
+    tokens = _sds((_B, _S), jnp.int32)
+    trace(
+        "binary-attn:prefill",
+        lambda p, t, c: Z.prefill(p, t, cfg, c),
+        sp,
+        tokens,
+        init_cache,
+    )
+    tok1 = _sds((_B,), jnp.int32)
+    trace(
+        "binary-attn:decode",
+        lambda p, t, c: Z.decode_step(p, t, cfg, c),
+        sp,
+        tok1,
+        init_cache,
+    )
+    return findings

@@ -1,0 +1,249 @@
+"""Attention-scores bench: place every scores-family backend on the roofs.
+
+The sibling of :mod:`repro.core.qmm_roofline` for the bitwise-attention
+operator family (PR 10): one cell per (backend x attention shape), with the
+analytical roofline columns next to measured wall-clock.
+
+* the candidate set is ``backend_registry.backend_names(family="scores")``
+  — a newly registered scores core shows up in the artifact with zero
+  edits here;
+* HBM traffic comes from the backend's registered ``traffic_model``
+  (signature ``(m, k, n, act_bits, weight_bits)`` with the scores keying
+  ``m = B*H*S``, ``k = dh``, ``n = T``, act=weight=1), falling back to
+  :func:`repro.core.qmm_roofline.default_traffic`;
+* useful work is ``2 * B*H*S * dh * T`` MAC-ops whatever the datapath —
+  the binary AND-popcount core and the unpack->int8 MXU core do the same
+  logical score matmul, they just pay different memory bills.
+
+``BENCH_attn.json`` (schema ``attn-scores/v1``) is the perf-trajectory
+artifact for the scores family: CI regenerates a smoke variant, validates
+both against the schema, and validation requires every currently registered
+scores backend to appear — adding a core without re-recording the artifact
+fails the build on purpose.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend_registry, dispatch, packing
+from repro.core.qmm_roofline import HBM_BW, PEAK_INT_OPS, default_traffic
+
+__all__ = [
+    "SCHEMA",
+    "DEFAULT_SHAPES",
+    "SMOKE_SHAPES",
+    "make_planes",
+    "cell_model",
+    "measure_cell",
+    "run_attn_bench",
+    "validate_attn_bench",
+    "save_attn_bench",
+    "load_attn_bench",
+    "format_table",
+]
+
+SCHEMA = "attn-scores/v1"
+
+#: (B, H, G, S, T, dh): a prefill-shaped cell (square S x T), a GQA
+#: decode-shaped cell (S=1 against a long cache), and a chunk-crossing T.
+DEFAULT_SHAPES: Tuple[Tuple[int, int, int, int, int, int], ...] = (
+    (1, 8, 8, 128, 128, 64),
+    (2, 8, 2, 1, 256, 64),
+    (1, 4, 2, 16, 384, 128),
+)
+
+SMOKE_SHAPES: Tuple[Tuple[int, int, int, int, int, int], ...] = (
+    (1, 4, 2, 8, 16, 32),
+)
+
+_CELL_NUMERIC_KEYS = (
+    "b",
+    "h",
+    "g",
+    "s",
+    "t",
+    "dh",
+    "flops",
+    "bytes",
+    "intensity",
+    "t_compute_us",
+    "t_memory_us",
+    "roof_us",
+    "measured_us",
+)
+
+
+def make_planes(
+    b: int, heads: int, s: int, dh: int, *, seed: int = 0
+) -> jax.Array:
+    """Random packed {0,1} planes ``(B, heads, S, dw)`` for timing."""
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(b, heads, s, dh)).astype(np.uint32)
+    return packing.pack_bits(jnp.asarray(bits), 1, axis=-1)
+
+
+def cell_model(
+    backend: str, b: int, h: int, g: int, s: int, t: int, dh: int
+) -> Dict:
+    """The analytical half of one cell: traffic, intensity, both roofs."""
+    spec = backend_registry.get_backend(backend)
+    traffic = spec.traffic_model or default_traffic
+    m = b * h * s
+    nbytes = float(traffic(m, dh, t, 1, 1))
+    flops = 2.0 * m * dh * t
+    t_compute = flops / PEAK_INT_OPS
+    t_memory = nbytes / HBM_BW
+    roof = max(t_compute, t_memory)
+    return {
+        "backend": backend,
+        "b": int(b),
+        "h": int(h),
+        "g": int(g),
+        "s": int(s),
+        "t": int(t),
+        "dh": int(dh),
+        "flops": flops,
+        "bytes": nbytes,
+        "intensity": flops / nbytes if nbytes else 0.0,
+        "t_compute_us": t_compute * 1e6,
+        "t_memory_us": t_memory * 1e6,
+        "roof_us": roof * 1e6,
+        "bound": "compute" if t_compute >= t_memory else "memory",
+    }
+
+
+def measure_cell(
+    backend: str,
+    b: int,
+    h: int,
+    g: int,
+    s: int,
+    t: int,
+    dh: int,
+    *,
+    warmup: int = 1,
+    reps: int = 3,
+) -> Dict:
+    """One cell: the model columns plus measured wall-clock of the core."""
+    cell = cell_model(backend, b, h, g, s, t, dh)
+    spec = backend_registry.get_backend(backend)
+    q_planes = make_planes(b, h, s, dh, seed=b * 31 + s)
+    k_planes = make_planes(b, g, t, dh, seed=g * 37 + t)
+    call = jax.jit(functools.partial(spec.run_scores, dh=dh))
+    secs = dispatch._wallclock_timer(
+        lambda: call(q_planes, k_planes), warmup=warmup, reps=reps
+    )
+    cell["measured_us"] = secs * 1e6
+    return cell
+
+
+def run_attn_bench(
+    shapes: Sequence[Tuple[int, int, int, int, int, int]] = DEFAULT_SHAPES,
+    backends: Optional[Iterable[str]] = None,
+    *,
+    warmup: int = 1,
+    reps: int = 3,
+) -> Dict:
+    """Measure every (backend x shape) cell; returns the artifact doc."""
+    names = (
+        tuple(backends)
+        if backends
+        else backend_registry.backend_names(family="scores")
+    )
+    cells: List[Dict] = []
+    for b, h, g, s, t, dh in shapes:
+        for name in names:
+            cells.append(measure_cell(name, b, h, g, s, t, dh,
+                                      warmup=warmup, reps=reps))
+    return {
+        "schema": SCHEMA,
+        "generated_unix": time.time(),
+        "platform": jax.default_backend(),
+        "hardware": {"hbm_bw": HBM_BW, "peak_int_ops": PEAK_INT_OPS},
+        "backends": list(names),
+        "cells": cells,
+    }
+
+
+def validate_attn_bench(doc: Dict) -> Dict:
+    """Schema check; raises ValueError on any violation, returns ``doc``.
+
+    Requires every currently registered scores-family backend to appear —
+    an artifact recorded before a core was added must be re-recorded.
+    """
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(
+            f"BENCH_attn schema mismatch: got {doc.get('schema')!r}, "
+            f"want {SCHEMA!r}"
+        )
+    hw = doc.get("hardware")
+    if not isinstance(hw, dict) or not all(
+        isinstance(hw.get(k), (int, float)) for k in ("hbm_bw", "peak_int_ops")
+    ):
+        raise ValueError("BENCH_attn 'hardware' must carry numeric roofs")
+    cells = doc.get("cells")
+    if not isinstance(cells, list) or not cells:
+        raise ValueError("BENCH_attn 'cells' must be a non-empty list")
+    for i, c in enumerate(cells):
+        if not isinstance(c.get("backend"), str):
+            raise ValueError(f"BENCH_attn cell {i} missing 'backend'")
+        if c.get("bound") not in ("compute", "memory"):
+            raise ValueError(f"BENCH_attn cell {i} has invalid 'bound'")
+        for key in _CELL_NUMERIC_KEYS:
+            if not isinstance(c.get(key), (int, float)):
+                raise ValueError(
+                    f"BENCH_attn cell {i} key {key!r} must be numeric"
+                )
+    covered = {c["backend"] for c in cells}
+    missing = set(backend_registry.backend_names(family="scores")) - covered
+    if missing:
+        raise ValueError(
+            f"BENCH_attn is stale: registered scores backends "
+            f"{sorted(missing)} have no cells — re-record with "
+            "benchmarks/attn_micro.py --out"
+        )
+    return doc
+
+
+def save_attn_bench(path: str, doc: Dict) -> None:
+    validate_attn_bench(doc)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def load_attn_bench(path: str) -> Dict:
+    with open(path) as f:
+        return validate_attn_bench(json.load(f))
+
+
+def format_table(doc: Dict) -> str:
+    """Human-readable roofline placement, one line per cell."""
+    lines = [
+        f"# attn scores ({doc['platform']}; HBM "
+        f"{doc['hardware']['hbm_bw']:.0f} B/s, int peak "
+        f"{doc['hardware']['peak_int_ops']:.3g} op/s)",
+        "backend   B  H  G  S    T    dh   bytes      AI       roof_us  "
+        "bound    measured_us",
+    ]
+    for c in doc["cells"]:
+        lines.append(
+            f"{c['backend']:<9}{c['b']:<3}{c['h']:<3}{c['g']:<3}{c['s']:<5}"
+            f"{c['t']:<5}{c['dh']:<5}"
+            f"{c['bytes']:<11.3g}{c['intensity']:<9.1f}"
+            f"{c['roof_us']:<9.3f}{c['bound']:<9}{c['measured_us']:.1f}"
+        )
+    return "\n".join(lines)

@@ -27,6 +27,12 @@ Capability flags:
   returning the backend's modeled HBM bytes for one QMM; the roofline bench
   (``core.qmm_roofline``) uses it to place the backend against the
   memory-bandwidth roof.  Defaults to the fully-packed traffic model.
+* ``families``    — the operator families the backend serves.  ``"qmm"`` is
+  the rank-2 quantized matmul family (the ``run`` contract); ``"scores"``
+  is the rank-4 attention-scores family (the ``run_scores`` contract:
+  packed uint32 Q/K planes in, int32 AND-popcount scores out, W1A1 only).
+  One backend may serve both (``mxu`` does); a scores-only backend is
+  rejected by ``qmm`` and never enumerated for qmm-family autotuning.
 
 Built-in backends live next to their implementations and self-register on
 import: ``repro.core.qmm`` registers ``mxu`` and ``popcount``;
@@ -76,6 +82,14 @@ class QMMBackend:
     probe: Optional[Callable[[int, int, int], bool]] = None
     #: Optional modeled HBM bytes f(m, k, n, act_bits, weight_bits).
     traffic_model: Optional[Callable[[int, int, int, int, int], int]] = None
+    #: Operator families served: "qmm" (rank-2 matmul via ``run``) and/or
+    #: "scores" (rank-4 attention scores via ``run_scores``).
+    families: FrozenSet[str] = frozenset({"qmm"})
+    #: Attention-scores entry point, required for the "scores" family:
+    #: ``run_scores(q_planes: u32 (B,H,S,dw), k_planes: u32 (B,G,T,dw), *,
+    #: dh: int) -> int32 (B,H,S,T)`` — AND-popcount counts in the unsigned
+    #: {0,1} plane domain; the caller applies the affine epilogue.
+    run_scores: Optional[Callable] = None
 
     def supports_precision(self, act_bits: int, weight_bits: int) -> bool:
         if self.precisions is None:
@@ -91,9 +105,14 @@ class QMMBackend:
         weight_bits: int,
         *,
         rank2: bool = True,
+        family: str = "qmm",
     ) -> bool:
         """Can this backend serve this problem on this host?"""
-        if self.rank2_only and not rank2:
+        if family not in self.families:
+            return False
+        if family == "scores" and self.run_scores is None:
+            return False
+        if family == "qmm" and self.rank2_only and not rank2:
             return False
         if not self.supports_precision(act_bits, weight_bits):
             return False
@@ -160,10 +179,15 @@ def get_backend(name: str) -> QMMBackend:
     return spec
 
 
-def backend_names() -> Tuple[str, ...]:
-    """Every registered backend name, in registration order."""
+def backend_names(family: Optional[str] = None) -> Tuple[str, ...]:
+    """Every registered backend name, in registration order.  With
+    ``family``, only backends serving that operator family."""
     _ensure_builtins()
-    return tuple(_REGISTRY)
+    if family is None:
+        return tuple(_REGISTRY)
+    return tuple(
+        name for name, spec in _REGISTRY.items() if family in spec.families
+    )
 
 
 def backend_specs() -> Tuple[QMMBackend, ...]:
@@ -172,7 +196,14 @@ def backend_specs() -> Tuple[QMMBackend, ...]:
 
 
 def candidate_names(
-    m: int, k: int, n: int, act_bits: int, weight_bits: int, *, rank2: bool = True
+    m: int,
+    k: int,
+    n: int,
+    act_bits: int,
+    weight_bits: int,
+    *,
+    rank2: bool = True,
+    family: str = "qmm",
 ) -> Tuple[str, ...]:
     """Names of every backend eligible for this problem on this host —
     the availability component of the autotune cache key."""
@@ -180,5 +211,5 @@ def candidate_names(
     return tuple(
         spec.name
         for spec in _REGISTRY.values()
-        if spec.eligible(m, k, n, act_bits, weight_bits, rank2=rank2)
+        if spec.eligible(m, k, n, act_bits, weight_bits, rank2=rank2, family=family)
     )

@@ -51,12 +51,15 @@ import numpy as np
 __all__ = [
     "BACKENDS",  # deprecated dynamic view; use backend_registry.backend_names()
     "DEFAULT_BACKEND",
+    "DEFAULT_SCORES_BACKEND",
     "TuneKey",
     "TuneRecord",
     "AutotuneCache",
     "candidate_backends",
     "make_problem",
+    "make_scores_problem",
     "choose_backend",
+    "choose_scores_backend",
     "get_cache",
     "reset_cache",
     "tuning_phase",
@@ -70,16 +73,21 @@ __all__ = [
 #: Fallback when autotuning is disabled or a cache entry is missing.
 DEFAULT_BACKEND = "mxu"
 
+#: Scores-family fallback: the packed AND-popcount core (always available,
+#: bit-exact against every other scores core).
+DEFAULT_SCORES_BACKEND = "binary"
+
 
 def __getattr__(name: str) -> Tuple[str, ...]:
-    # Deprecated: ``dispatch.BACKENDS`` predates the backend registry.  It is
-    # served dynamically (PEP 562) so existing imports keep seeing every
-    # registered backend; new code should call
-    # ``repro.core.backend_registry.backend_names()`` directly.
+    # Deprecated: ``dispatch.BACKENDS`` predates the backend registry (and
+    # backend *families*).  Every legacy call site reads it as "names valid
+    # for ``QE.qmm``", so it is served dynamically (PEP 562) as the qmm
+    # family; new code should call
+    # ``repro.core.backend_registry.backend_names(family=...)`` directly.
     if name == "BACKENDS":
         from repro.core import backend_registry
 
-        return backend_registry.backend_names()
+        return backend_registry.backend_names(family="qmm")
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
@@ -170,7 +178,14 @@ def _bucket_m(m: int) -> int:
 
 
 def candidate_backends(
-    m: int, k: int, n: int, act_bits: int, weight_bits: int, *, rank2: bool = True
+    m: int,
+    k: int,
+    n: int,
+    act_bits: int,
+    weight_bits: int,
+    *,
+    rank2: bool = True,
+    family: str = "qmm",
 ) -> Tuple[str, ...]:
     """Backends eligible for this problem on this host (the "availability"
     component of the cache key) — enumerated from the backend registry, so
@@ -179,7 +194,7 @@ def candidate_backends(
     from repro.core import backend_registry  # lazy: keeps core import-light
 
     return backend_registry.candidate_names(
-        m, k, n, act_bits, weight_bits, rank2=rank2
+        m, k, n, act_bits, weight_bits, rank2=rank2, family=family
     )
 
 
@@ -196,6 +211,9 @@ class TuneKey:
     weight_bits: int
     candidates: Tuple[str, ...]
     tag: str = ""
+    #: Operator family: "qmm" (rank-2 matmul) or "scores" (rank-4 attention
+    #: scores, m = B*H*S, k = dh, n = T).  Families never share entries.
+    family: str = "qmm"
 
 
 @dataclasses.dataclass
@@ -235,6 +253,28 @@ def make_problem(key: TuneKey):
         colsum = FA.weight_corrections(wq)
         wq = wq.pack(axis=0)
     return xq, wq, colsum
+
+
+def make_scores_problem(key: TuneKey):
+    """Synthetic packed Q/K bit-planes for one scores-family key.
+
+    The key folds ``B*H*S`` into ``m``, ``dh`` into ``k`` and ``T`` into
+    ``n``; timing collapses the batch/head dims to 1 and puts the whole
+    ``m`` on the S axis — the popcount/MXU cores are lane-parallel over
+    rows, so the timing is representative of any (B, H, S) split with the
+    same product."""
+    from repro.core import packing
+
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(
+        (key.m * 1000003 + key.k * 10007 + key.n * 101 + 5) % (2**32)
+    )
+    q_bits = rng.integers(0, 2, size=(1, 1, key.m, key.k), dtype=np.uint8)
+    k_bits = rng.integers(0, 2, size=(1, 1, key.n, key.k), dtype=np.uint8)
+    q_planes = packing.pack_bits(jnp.asarray(q_bits), 1, axis=-1)
+    k_planes = packing.pack_bits(jnp.asarray(k_bits), 1, axis=-1)
+    return q_planes, k_planes
 
 
 def _wallclock_timer(fn: Callable[[], object], *, warmup: int = 1, reps: int = 3) -> float:
@@ -285,6 +325,7 @@ class AutotuneCache:
         *,
         tag: Optional[str] = None,
         rank2: bool = True,
+        family: str = "qmm",
     ) -> str:
         """The winning backend for this problem (timing on first miss)."""
         mb = _bucket_m(int(m))
@@ -294,8 +335,11 @@ class AutotuneCache:
             int(n),
             int(act_bits),
             int(weight_bits),
-            candidate_backends(mb, k, n, act_bits, weight_bits, rank2=rank2),
+            candidate_backends(
+                mb, k, n, act_bits, weight_bits, rank2=rank2, family=family
+            ),
             current_phase() if tag is None else tag,
+            family,
         )
         rec = self._entries.get(key)
         if rec is None:
@@ -318,6 +362,8 @@ class AutotuneCache:
     def _tune(self, key: TuneKey) -> TuneRecord:
         if len(key.candidates) == 1:
             return TuneRecord(key.candidates[0], {}, False)
+        if key.family == "scores":
+            return self._tune_scores(key)
         from repro.core import qmm as QE
 
         xq, wq, colsum = make_problem(key)
@@ -336,6 +382,28 @@ class AutotuneCache:
         best = min(timings, key=timings.get)
         return TuneRecord(best, {b: t * 1e6 for b, t in timings.items()}, True)
 
+    def _tune_scores(self, key: TuneKey) -> TuneRecord:
+        """Scores-family timing: each candidate's ``run_scores`` over the
+        same packed planes.  All scores cores are bit-exact against
+        ``ref.binary_attn_scores_ref``, so the winner is purely a speed
+        verdict — numerics (and batch invariance) don't depend on it."""
+        from repro.core import backend_registry
+
+        q_planes, k_planes = make_scores_problem(key)
+        timings: Dict[str, float] = {}
+        for b in key.candidates:
+            spec = backend_registry.get_backend(b)
+            call = jax.jit(functools.partial(spec.run_scores, dh=key.k))
+            try:
+                timings[b] = self._timer(lambda c=call: c(q_planes, k_planes))
+            except Exception:  # noqa: BLE001 — a failing backend just loses
+                continue
+            self.timing_runs += 1
+        if not timings:
+            return TuneRecord(DEFAULT_SCORES_BACKEND, {}, False, failed=True)
+        best = min(timings, key=timings.get)
+        return TuneRecord(best, {b: t * 1e6 for b, t in timings.items()}, True)
+
     # -- persistence ---------------------------------------------------------
 
     def to_json(self) -> dict:
@@ -350,6 +418,7 @@ class AutotuneCache:
                     "weight_bits": k.weight_bits,
                     "candidates": list(k.candidates),
                     "tag": k.tag,
+                    "family": k.family,
                     "backend": r.backend,
                     "timings_us": r.timings_us,
                     "timed": r.timed,
@@ -392,6 +461,7 @@ class AutotuneCache:
                 int(e["weight_bits"]),
                 tuple(e["candidates"]),
                 e.get("tag", ""),
+                e.get("family", "qmm"),
             )
             self._entries[key] = TuneRecord(
                 e["backend"], dict(e.get("timings_us", {})), bool(e.get("timed"))
@@ -451,5 +521,32 @@ def choose_backend(
     return resolve_backend(
         (cache or get_cache()).choose(
             m, k, n, act_bits, weight_bits, tag=tag, rank2=rank2
+        )
+    )
+
+
+def choose_scores_backend(
+    b: int,
+    h: int,
+    s: int,
+    t: int,
+    dh: int,
+    *,
+    tag: Optional[str] = None,
+    cache: Optional[AutotuneCache] = None,
+) -> str:
+    """Resolve the scores-family core for one attention-scores problem.
+
+    Keys on ``m = B*H*S`` (bucketed), ``k = dh``, ``n = T`` under the
+    "scores" family, W1A1 by construction.  Demotions apply to the returned
+    name exactly like qmm dispatch — ``pin_demotion("binary", "mxu")``
+    reroutes the popcount core to the MXU core without changing numerics
+    (every scores core is bit-exact against the ref oracle).
+    """
+    if not autotune_enabled():
+        return resolve_backend(DEFAULT_SCORES_BACKEND)
+    return resolve_backend(
+        (cache or get_cache()).choose(
+            int(b) * int(h) * int(s), dh, t, 1, 1, tag=tag, family="scores"
         )
     )

@@ -153,6 +153,12 @@ def qmm(
         # literal or per-layer override while the pin is active.
         backend = dispatch.resolve_backend(backend)
     spec = backend_registry.get_backend(backend)  # ValueError on unknown name
+    if "qmm" not in spec.families:
+        raise ValueError(
+            f"backend {backend!r} serves families {sorted(spec.families)}, "
+            "not the qmm family; scores-only backends go through "
+            "kernels.ops.binary_attn_scores"
+        )
     return spec.run(x, w, w_colsum=w_colsum, out_dtype=out_dtype)
 
 
@@ -183,10 +189,28 @@ def _popcount_traffic(m, k, n, act_bits, weight_bits) -> int:
     )
 
 
+def _mxu_scores(q_planes: jax.Array, k_planes: jax.Array, *, dh: int) -> jax.Array:
+    """Scores-family core on the MXU: unpack the {0,1} planes to int8 and run
+    a grouped int8 dot with int32 accumulation.  Bit-exact against the
+    popcount cores (same integer math, different datapath), so the autotuner
+    is free to pick either without touching numerics."""
+    qb = packing.unpack_bits(q_planes, 1, dh, axis=-1, dtype=jnp.int8)
+    kb = packing.unpack_bits(k_planes, 1, dh, axis=-1, dtype=jnp.int8)
+    b, h, s, _ = qb.shape
+    g = kb.shape[1]
+    qg = qb.reshape(b, g, h // g, s, dh)
+    out = jnp.einsum(
+        "bgxsd,bgtd->bgxst", qg, kb, preferred_element_type=jnp.int32
+    )
+    return out.reshape(b, h, s, kb.shape[2])
+
+
 @backend_registry.register_backend(
     "mxu",
     description="int8 dot_general on the MXU, int32 accumulation",
     traffic_model=_mxu_traffic,
+    families=frozenset({"qmm", "scores"}),
+    run_scores=_mxu_scores,
 )
 def _run_mxu(x: QuantTensor, w: QuantTensor, *, w_colsum=None, out_dtype=jnp.float32):
     return flow_abstraction.qmm_flow(

@@ -4,8 +4,9 @@ The serving roofline (``benchmarks/roofline.py``) charges whole programs from
 dry-run HLO cost analysis; this module does the same accounting for a single
 QMM problem, per *backend*, using the registry as the source of truth:
 
-* the candidate set is ``backend_registry.backend_names()`` — a newly
-  registered backend shows up in the artifact with zero edits here;
+* the candidate set is ``backend_registry.backend_names(family="qmm")`` —
+  a newly registered QMM backend shows up in the artifact with zero edits
+  here (scores-family backends have their own artifact, ``BENCH_attn.json``);
 * each backend's HBM traffic comes from its registered ``traffic_model``
   capability (falling back to :func:`default_traffic`, the packed-operand
   floor, when a backend declares none);
@@ -173,7 +174,11 @@ def run_qmm_roofline(
     reps: int = 3,
 ) -> Dict:
     """Measure every (backend x shape x precision) cell; returns the doc."""
-    names = tuple(backends) if backends else backend_registry.backend_names()
+    names = (
+        tuple(backends)
+        if backends
+        else backend_registry.backend_names(family="qmm")
+    )
     cells: List[Dict] = []
     for m, k, n in shapes:
         for ab, wb in precisions:
@@ -218,7 +223,7 @@ def validate_qmm_bench(doc: Dict) -> Dict:
             if not isinstance(c.get(key), (int, float)):
                 raise ValueError(f"BENCH_qmm cell {i} key {key!r} must be numeric")
     covered = {c["backend"] for c in cells}
-    missing = set(backend_registry.backend_names()) - covered
+    missing = set(backend_registry.backend_names(family="qmm")) - covered
     if missing:
         raise ValueError(
             f"BENCH_qmm is stale: registered backends {sorted(missing)} have no "

@@ -1,0 +1,92 @@
+"""Bitwise attention-scores core: AND-popcount over packed Q/K bit-planes.
+
+Bitformer's XNOR-popcount similarity, expressed in the repo's unified
+unsigned-mantissa form (see ``core.flow_abstraction``): with Q and K
+elastically binarized to ``alpha * b + gamma`` (b in {0, 1}), the +-1
+XNOR-popcount becomes {0, 1} AND-popcount and the affine epilogue —
+applied by the caller in ``models.attention`` — restores the real-valued
+score:
+
+    scores = aq*ak * popcount(qb & kb)
+           + aq*gk * rowsum(qb) + gq*ak * colsum(kb) + gq*gk * dh
+
+This module is the integer core only (the "binary" entry of the scores
+backend family): packed planes in, int32 counts out, lane-parallel jnp —
+the rank-4 analogue of ``core.qmm.and_popcount_matmul``.  GQA head
+expansion happens here via view reshapes (head ``h`` reads kv head
+``h // (H/G)``), so the packed K planes are never materialized per query
+head.
+
+Zero tail bits in the last packed word are benign by construction: the Q
+planes are packed fresh from {0,1} mantissas each call, so their tail bits
+are zero and AND masks whatever the K tail holds.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+__all__ = ["binary_attn_scores_planes"]
+
+# Key positions processed per popcount sweep; bounds the broadcast joint
+# intermediate to t_chunk * (G * S') * dw words per batch element.
+_T_CHUNK = 256
+
+
+def binary_attn_scores_planes(
+    q_planes: jax.Array, k_planes: jax.Array, *, dh: int
+) -> jax.Array:
+    """``out[b,h,s,t] = sum_d q[b,h,s,d] * k[b,h//g,t,d]`` for bits in {0,1}.
+
+    Args:
+      q_planes: uint32 ``(B, H, S, dw)`` — query bits, dh packed little-endian
+        along the last axis (``dw = packed_len(dh, 1)``).
+      k_planes: uint32 ``(B, G, T, dw)`` — key bits per kv head; H must be a
+        multiple of G (GQA head expansion).
+      dh: logical head dim (the packed length).
+
+    Returns:
+      int32 ``(B, H, S, T)`` AND-popcount counts.
+    """
+    if q_planes.dtype != jnp.uint32 or k_planes.dtype != jnp.uint32:
+        raise TypeError(
+            "binary_attn_scores_planes: operands must be uint32 bit-planes, "
+            f"got {q_planes.dtype} and {k_planes.dtype}"
+        )
+    if q_planes.ndim != 4 or k_planes.ndim != 4:
+        raise ValueError(
+            "binary_attn_scores_planes: operands must be rank 4, got "
+            f"{q_planes.ndim} and {k_planes.ndim}"
+        )
+    dw = packing.packed_len(dh, 1)
+    if q_planes.shape[-1] != dw or k_planes.shape[-1] != dw:
+        raise ValueError(
+            f"binary_attn_scores_planes: packed axis must hold "
+            f"ceil({dh}/32) = {dw} words, got {q_planes.shape[-1]} "
+            f"and {k_planes.shape[-1]}"
+        )
+    b, h, s, _ = q_planes.shape
+    g, t = k_planes.shape[1], k_planes.shape[2]
+    if h % g:
+        raise ValueError(
+            f"binary_attn_scores_planes: H={h} not a multiple of G={g}"
+        )
+    # Fold the per-kv-head query group onto the row axis: each kv head's
+    # packed planes are popcounted against all of its group's queries in one
+    # lane-parallel sweep.
+    qg = q_planes.reshape(b, g, (h // g) * s, dw)
+    out_chunks = []
+    for t0 in range(0, t, _T_CHUNK):
+        k_blk = jax.lax.slice_in_dim(k_planes, t0, min(t0 + _T_CHUNK, t), axis=2)
+        # (B, G, M, 1, dw) & (B, G, 1, Tc, dw) -> popcount -> sum over dw.
+        joint = qg[:, :, :, None, :] & k_blk[:, :, None, :, :]
+        out_chunks.append(
+            jnp.sum(jax.lax.population_count(joint).astype(jnp.int32), axis=-1)
+        )
+    out = (
+        jnp.concatenate(out_chunks, axis=-1) if len(out_chunks) > 1 else out_chunks[0]
+    )
+    return out.reshape(b, h, s, t)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import backend_registry, flow_abstraction, packing, quantization
 from repro.core.quantization import QuantTensor
+from repro.kernels import binary_attn as _ba
 from repro.kernels import binary_qmm as _bq
 from repro.kernels import bitserial_qmm as _bs
 from repro.kernels import fused_qmm as _fq
@@ -28,6 +29,7 @@ __all__ = [
     "bitserial_qmm_int",
     "qmm_pallas",
     "qmm_fused",
+    "binary_attn_scores",
 ]
 
 
@@ -316,5 +318,96 @@ backend_registry.register(
         needs_unsigned_mantissas=True,
         probe=_interpret_probe,
         traffic_model=_traffic_fused,
+    )
+)
+
+
+# ---------------------------------------------------------------------------
+# Scores family: rank-4 attention-scores cores (W1A1 packed planes).
+# "mxu" also serves this family (registered in core.qmm); these two are
+# scores-only, so the qmm entry point rejects them by family.
+# ---------------------------------------------------------------------------
+
+
+def binary_attn_scores(
+    q_planes: jax.Array,
+    k_planes: jax.Array,
+    *,
+    dh: int,
+    backend: str = "auto",
+    tag: Optional[str] = None,
+) -> jax.Array:
+    """Attention-scores integer core, backend-dispatched (scores family).
+
+    ``backend="auto"`` consults the autotune cache under the "scores" family
+    key (m = B*H*S, k = dh, n = T); explicit names resolve through the
+    demotion table exactly like ``qmm`` — every scores core is bit-exact
+    against ``ref.binary_attn_scores_ref``, so neither autotuning nor a
+    demotion can change numerics.
+    """
+    from repro.core import dispatch
+
+    b, h, s, _ = q_planes.shape
+    t = k_planes.shape[2]
+    if backend == "auto":
+        backend = dispatch.choose_scores_backend(b, h, s, t, dh, tag=tag)
+    else:
+        backend = dispatch.resolve_backend(backend)
+    spec = backend_registry.get_backend(backend)
+    if "scores" not in spec.families or spec.run_scores is None:
+        raise ValueError(
+            f"backend {backend!r} does not serve the scores family; "
+            f"scores backends: "
+            f"{', '.join(backend_registry.backend_names(family='scores'))}"
+        )
+    return spec.run_scores(q_planes, k_planes, dh=dh)
+
+
+def _float_scores(q_planes: jax.Array, k_planes: jax.Array, *, dh: int) -> jax.Array:
+    """Float-dot scores core: unpack the {0,1} planes to f32 and einsum.
+
+    The differential oracle's compute path — exact (hence bit-exact vs the
+    popcount cores) because counts are bounded by dh << 2^24, within f32's
+    integer-exact range.
+    """
+    qb = packing.unpack_bits(q_planes, 1, dh, axis=-1, dtype=jnp.float32)
+    kb = packing.unpack_bits(k_planes, 1, dh, axis=-1, dtype=jnp.float32)
+    b, h, s, _ = qb.shape
+    g = kb.shape[1]
+    qg = qb.reshape(b, g, h // g, s, dh)
+    out = jnp.einsum("bgxsd,bgtd->bgxst", qg, kb)
+    return out.reshape(b, h, s, kb.shape[2]).astype(jnp.int32)
+
+
+def _traffic_scores_binary(m, k, n, act_bits, weight_bits) -> int:
+    # Packed planes in, int32 counts out: m and n rows of ceil(k/32) words.
+    kw_bytes = 4 * packing.packed_len(k, 1)
+    return m * kw_bytes + n * kw_bytes + 4 * m * n
+
+
+backend_registry.register(
+    backend_registry.QMMBackend(
+        name="binary",
+        run=_ba.binary_attn_scores_planes,  # scores-only: qmm rejects by family
+        run_scores=_ba.binary_attn_scores_planes,
+        description="rank-4 AND-popcount attention scores over packed "
+        "uint32 Q/K bit-planes (Bitformer path)",
+        precisions=frozenset({(1, 1)}),
+        needs_unsigned_mantissas=True,
+        families=frozenset({"scores"}),
+        traffic_model=_traffic_scores_binary,
+    )
+)
+
+backend_registry.register(
+    backend_registry.QMMBackend(
+        name="float",
+        run=_float_scores,  # scores-only: qmm rejects by family
+        run_scores=_float_scores,
+        description="float-dot attention scores over unpacked {0,1} planes "
+        "(the differential oracle's compute path)",
+        precisions=frozenset({(1, 1)}),
+        families=frozenset({"scores"}),
+        traffic_model=lambda m, k, n, ab, wb: 4 * (m * k + n * k) + 4 * m * n,
     )
 )

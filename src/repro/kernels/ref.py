@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import packing
 
@@ -23,6 +24,7 @@ __all__ = [
     "popcount_qmm_ref",
     "bitserial_qmm_ref",
     "fused_qmm_ref",
+    "binary_attn_scores_ref",
 ]
 
 
@@ -154,3 +156,51 @@ def fused_qmm_ref(
     t2 = (g1 * a2) * col.astype(jnp.float32)
     t3 = g1 * g2 * jnp.float32(k)
     return ((t0 + t1) + t2) + t3
+
+
+def _unpack_bits_np(planes: np.ndarray, length: int) -> np.ndarray:
+    """NumPy unpack of 1-bit little-endian planes along the last axis."""
+    shifts = np.arange(32, dtype=np.uint32)
+    bits = (planes[..., :, None] >> shifts) & np.uint32(1)
+    bits = bits.reshape(*planes.shape[:-1], planes.shape[-1] * 32)
+    return bits[..., :length].astype(np.int32)
+
+
+def binary_attn_scores_ref(
+    q_planes: np.ndarray, k_planes: np.ndarray, dh: int
+) -> np.ndarray:
+    """Pure-NumPy oracle for the scores family: the bit-exactness contract.
+
+    ``out[b, h, s, t] = sum_d q_bits[b, h, s, d] * k_bits[b, h // g, t, d]``
+    over {0, 1} bits, int32 — head ``h`` reads kv head ``h // (H/G)`` (GQA
+    head expansion).  Every registered scores backend's ``run_scores`` must
+    match this exactly; the affine epilogue back to the real-valued score
+    domain is shared caller code and is NOT part of this contract.
+
+    Operands are uint32 ``(B, H, S, dw)`` / ``(B, G, T, dw)`` with ``dh``
+    bits packed little-endian along the last axis.
+    """
+    q_planes = np.asarray(q_planes)
+    k_planes = np.asarray(k_planes)
+    for name, x in (("q_planes", q_planes), ("k_planes", k_planes)):
+        if x.dtype != np.uint32:
+            raise TypeError(
+                f"binary_attn_scores_ref: {name} must be uint32, got {x.dtype}"
+            )
+        if x.ndim != 4:
+            raise ValueError(
+                f"binary_attn_scores_ref: {name} must be rank 4, got {x.ndim}"
+            )
+        if x.shape[-1] != _packed_words(dh):
+            raise ValueError(
+                f"binary_attn_scores_ref: {name} packed axis has "
+                f"{x.shape[-1]} words, expected ceil({dh}/32) = {_packed_words(dh)}"
+            )
+    b, h, s, _ = q_planes.shape
+    g, t = k_planes.shape[1], k_planes.shape[2]
+    if h % g:
+        raise ValueError(f"binary_attn_scores_ref: H={h} not a multiple of G={g}")
+    qb = _unpack_bits_np(q_planes, dh)
+    kb = np.repeat(_unpack_bits_np(k_planes, dh), h // g, axis=1)
+    out = np.einsum("bhsd,bhtd->bhst", qb.astype(np.int64), kb.astype(np.int64))
+    return out.astype(np.int32)

@@ -27,9 +27,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, QuantConfig
+from repro.core import backend_registry, packing
 from repro.core import flow_abstraction as FA
 from repro.core import quantization as Q
 from repro.core import site_log
+from repro.kernels import ops as K_ops
 from repro.models import layers as L
 
 __all__ = [
@@ -86,6 +88,21 @@ def init_kv_cache(
         # ring buffer: local layers never need more than window_size slots
         max_len = min(max_len, cfg.window_size)
     if q.enabled and q.kv_cache_bits in (4, 8):
+        if _binary_scores_site(q, "attn.qk") is not None:
+            # Bitwise attention engaged: K rows are stored as PACKED 1-bit
+            # planes (uint32, dh bits little-endian along the last axis) —
+            # the ~8-16x KV memory shrink vs int8/bf16.  V stays int8 (the
+            # PV act x act QMM is unchanged).
+            dw = packing.packed_len(dh, 1)
+            return {
+                "k": jnp.zeros((batch, max_len, kvh, dw), jnp.uint32),
+                "v": jnp.zeros((batch, max_len, kvh, dh), jnp.int8),
+                "k_scale": jnp.ones((batch,), jnp.float32),
+                "k_offset": jnp.zeros((batch,), jnp.float32),
+                "v_scale": jnp.ones((batch,), jnp.float32),
+                "v_offset": jnp.zeros((batch,), jnp.float32),
+                "pos": jnp.zeros((batch,), jnp.int32),
+            }
         return {
             "k": jnp.zeros((batch, max_len, kvh, dh), jnp.int8),
             "v": jnp.zeros((batch, max_len, kvh, dh), jnp.int8),
@@ -137,6 +154,154 @@ def _dequantize_from_cache(m: jax.Array, scale, offset, dtype):
     scale = _per_row(scale, m.ndim)
     offset = _per_row(offset, m.ndim)
     return ((m.astype(jnp.float32) + 128.0) * scale + offset).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# bitwise attention (Bitformer scores via the scores backend family)
+# ---------------------------------------------------------------------------
+
+
+def _binary_scores_site(quant: QuantConfig, site: str) -> Optional[str]:
+    """The scores-only backend configured for ``site``, or None.
+
+    A scores-only name ("binary", "float") engages the bitwise attention
+    path at that site; "auto" and qmm-family names leave the int8 path
+    untouched — binarizing K is a precision choice, so it is strictly
+    opt-in via ``backend_overrides={"attn.qk": "binary"}``.
+    """
+    if not (quant.enabled and quant.quantize_attention):
+        return None
+    name = quant.backend_for(site)
+    if name == "auto":
+        return None
+    try:
+        spec = backend_registry.get_backend(name)
+    except ValueError:
+        return None
+    if "scores" in spec.families and "qmm" not in spec.families:
+        return name
+    return None
+
+
+def _scores_core(site_backend: str) -> str:
+    """Map a site override to the integer-core backend name.
+
+    "binary" is the family engagement: its core is autotuned ("auto" over
+    the scores candidates — binary vs mxu-int vs float, all bit-exact, so
+    the verdict is pure speed).  Any other scores-only name pins its own
+    core — "float" is the differential oracle's deterministic compute path.
+    """
+    return "auto" if site_backend == "binary" else site_backend
+
+
+def _cache_binary(cache: Optional[dict]) -> bool:
+    """Does this cache hold packed binary K planes (uint32 rows)?"""
+    return cache is not None and "k" in cache and cache["k"].dtype == jnp.uint32
+
+
+def _binarize_rows(x: jax.Array) -> Q.QuantTensor:
+    """Per-row elastic binarization (BiT): the engine's 1-bit activation
+    grid, min/max reduced over every axis but the batch row — co-batched
+    requests never share a binarization grid (batch invariance)."""
+    return Q.quantize_activation(x.astype(jnp.float32), 1, per_channel_axis=0)
+
+
+def _binarize_to_cache(k: jax.Array, scale, offset) -> jax.Array:
+    """Binarize with a FIXED affine (prefill-calibrated) and pack: the
+    decode-time analogue of ``_quantize_to_cache`` for packed binary rows."""
+    scale = _per_row(scale, k.ndim)
+    offset = _per_row(offset, k.ndim)
+    bit = jnp.clip(jnp.round((k.astype(jnp.float32) - offset) / scale), 0.0, 1.0)
+    return packing.pack_bits(bit.astype(jnp.uint32), 1, axis=-1)
+
+
+def _pack_q_heads(bits: jax.Array) -> jax.Array:
+    """(B, S, H, dh) {0,1} mantissas -> (B, H, S, dw) packed uint32 planes
+    (the scores-core operand layout)."""
+    planes = packing.pack_bits(bits.astype(jnp.uint32), 1, axis=-1)
+    return planes.transpose(0, 2, 1, 3)
+
+
+def _plane_popcounts(planes: jax.Array) -> jax.Array:
+    """Per-row bit totals straight off packed planes — exact (tail bits are
+    zero by packing) and cheaper than unpacking just to sum."""
+    return jnp.sum(
+        jax.lax.population_count(planes).astype(jnp.int32), axis=-1
+    ).astype(jnp.float32)
+
+
+def _scores_binary(q, k_planes_t, k_scale, k_offset, dh: int, site: str, backend: str):
+    """Bitwise QK^T: elastic 1-bit Q against packed binary K planes.
+
+    AND-popcount counts from the dispatched scores core, then the affine
+    epilogue back to the real-valued score domain (the algebra is in
+    ``kernels.binary_attn``):
+
+        scores = aq*ak*counts + aq*gk*rowsum(qb) + gq*ak*colsum(kb) + gq*gk*dh
+
+    q: (B,S,H,dh) float.  k_planes_t: (B,kvH,T,dw) packed key bits.
+    k_scale/k_offset: (B,) binarization affine of the cached keys (qmax=1
+    grid — NO re-centering shift, unlike the int8 cache epilogue).
+    """
+    b, s, h, _ = q.shape
+    g = h // k_planes_t.shape[1]
+    qq = _binarize_rows(q)
+    if site_log.is_recording():
+        site_log.record(
+            kind="attn",
+            site=site,
+            bits=1,
+            mantissa_dtype=str(qq.mantissa.dtype),
+            backend=backend,
+        )
+    q_planes = _pack_q_heads(qq.mantissa)  # (B,H,S,dw)
+    counts = K_ops.binary_attn_scores(
+        q_planes, k_planes_t, dh=dh, backend=_scores_core(backend)
+    ).astype(jnp.float32)
+    row = _plane_popcounts(q_planes)[..., None]  # (B,H,S,1)
+    col = jnp.repeat(_plane_popcounts(k_planes_t), g, axis=1)[:, :, None, :]
+    a1 = jnp.reshape(qq.scale, (b, 1, 1, 1))
+    g1 = jnp.reshape(qq.offset, (b, 1, 1, 1))
+    a2 = _per_row(k_scale, 4)
+    g2 = _per_row(k_offset, 4)
+    return counts * (a1 * a2) + (a1 * g2) * row + (g1 * a2) * col + g1 * g2 * dh
+
+
+def _scores_binary_latent(q_abs, ckv_m, ckv_scale, ckv_offset, site: str, backend: str):
+    """Bitwise absorbed-MLA scores against the int8 latent cache.
+
+    The latent cache layout is UNCHANGED (int8 also feeds the PV QMM), so
+    the key side re-binarizes each int8 mantissa at its grid midpoint:
+    ``bit = (m >= 0)`` — per-element and deterministic, hence stale-free
+    and batch-invariant — with the induced affine ``ak = 128*sc``,
+    ``gk = off + 64*sc``.  The packed-cache memory win is GQA-only; this
+    path buys the bitwise O(n^2) score core.  Returns (B,H,S,T).
+    """
+    b, s, h, r = q_abs.shape
+    qq = _binarize_rows(q_abs)
+    if site_log.is_recording():
+        site_log.record(
+            kind="attn",
+            site=site,
+            bits=1,
+            mantissa_dtype=str(qq.mantissa.dtype),
+            backend=backend,
+        )
+    q_planes = _pack_q_heads(qq.mantissa)  # (B,H,S,rw)
+    k_bits = (ckv_m >= 0).astype(jnp.uint32)
+    k_planes = packing.pack_bits(k_bits, 1, axis=-1)[:, None]  # (B,1,T,rw)
+    counts = K_ops.binary_attn_scores(
+        q_planes, k_planes, dh=r, backend=_scores_core(backend)
+    ).astype(jnp.float32)
+    row = _plane_popcounts(q_planes)[..., None]  # (B,H,S,1)
+    col = _plane_popcounts(k_planes)[:, :, None, :]  # (B,1,1,T)
+    sc = jnp.asarray(ckv_scale, jnp.float32)
+    off = jnp.asarray(ckv_offset, jnp.float32)
+    a1 = jnp.reshape(qq.scale, (b, 1, 1, 1))
+    g1 = jnp.reshape(qq.offset, (b, 1, 1, 1))
+    a2 = _per_row(128.0 * sc, 4)
+    g2 = _per_row(off + 64.0 * sc, 4)
+    return counts * (a1 * a2) + (a1 * g2) * row + (g1 * a2) * col + g1 * g2 * r
 
 
 # ---------------------------------------------------------------------------
@@ -220,13 +385,15 @@ def _int_einsum(spec: str, a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.einsum(spec, a, b, preferred_element_type=jnp.int32)
 
 
-def _scores_int(q, k_mantissa, k_scale, k_offset, attn_bits: int):
+def _scores_int(q, k_mantissa, k_scale, k_offset, attn_bits: int, backend: str = "auto"):
     """Integer QK^T via the flow abstraction (act x act QMM, paper type 2),
     GROUPED over kv heads (k stays un-expanded and kv-sharded; no dim
     merging — see _int_einsum).
 
     q: (B,S,H,dh) float -> quantized per-tensor.
     k_mantissa: (B,T,kvH,dh) int8 re-centered cache mantissas.
+    ``backend`` is the site's configured name (site_log bookkeeping only —
+    scores-only names never reach this function; see _binary_scores_site).
     """
     b, s, h, dh = q.shape
     t, kvh = k_mantissa.shape[1], k_mantissa.shape[2]
@@ -240,6 +407,7 @@ def _scores_int(q, k_mantissa, k_scale, k_offset, attn_bits: int):
             site="attn.qk",
             bits=attn_bits,
             mantissa_dtype=str(qr.mantissa.dtype),
+            backend=backend,
         )
     x1 = qr.mantissa.reshape(b, s, kvh, g, dh)  # int8
     x2 = k_mantissa.astype(jnp.int8)  # (B,T,kvH,dh)
@@ -286,7 +454,9 @@ def _write_prefill_cache(
     return out
 
 
-def _scores_int_latent(q_abs, ckv_m, ckv_scale, ckv_offset, attn_bits: int):
+def _scores_int_latent(
+    q_abs, ckv_m, ckv_scale, ckv_offset, attn_bits: int, backend: str = "auto"
+):
     """Absorbed-MLA scores as one act x act QMM against the shared latent
     cache: ``scores[b,h,s,t] = sum_r q_abs[b,s,h,r] * ckv[b,t,r]``.
 
@@ -305,6 +475,7 @@ def _scores_int_latent(q_abs, ckv_m, ckv_scale, ckv_offset, attn_bits: int):
             site="attn.qk_latent",
             bits=attn_bits,
             mantissa_dtype=str(qr.mantissa.dtype),
+            backend=backend,
         )
     x1 = qr.mantissa.reshape(b, s * h, r)
     x2 = jnp.swapaxes(ckv_m, -1, -2).astype(jnp.int8)  # (b, r, t)
@@ -420,6 +591,15 @@ def attention(
         and kv_override is None
         and (cache is None or quantized)
     )
+    # Bitwise attention: a scores-only backend override on "attn.qk"
+    # rebinarizes Q per call and stores K as packed 1-bit planes; the score
+    # core dispatches through the scores backend family.
+    qk_backend = quant.backend_for("attn.qk")
+    use_binary = (
+        use_int
+        and _binary_scores_site(quant, "attn.qk") is not None
+        and (cache is None or _cache_binary(cache))
+    )
     new_cache = cache
 
     if s > 1 or cache is None:
@@ -427,13 +607,24 @@ def attention(
         # (training, or serving prefill from an empty cache)
         sdt = jnp.bfloat16 if cfg.attn_scores_dtype == "bf16" else jnp.float32
         expand = cfg.gqa_mode == "expand"
-        if use_int:
+        if use_int and use_binary:
+            kq = _binarize_rows(k)
+            # cache affines are per-row (B,) — drop the keepdims axes
+            k_sc = jnp.reshape(kq.scale, (b,))
+            k_off = jnp.reshape(kq.offset, (b,))
+            k_m = packing.pack_bits(kq.mantissa.astype(jnp.uint32), 1, axis=-1)
+            v_sc, v_off = _calibrate_rows(v)
+            v_m = _quantize_to_cache(v, v_sc, v_off)
+            scores = _scores_binary(
+                q, k_m.transpose(0, 2, 1, 3), k_sc, k_off, dh, "attn.qk", qk_backend
+            )
+        elif use_int:
             k_sc, k_off = _calibrate_rows(k)
             v_sc, v_off = _calibrate_rows(v)
             k_m = _quantize_to_cache(k, k_sc, k_off)
             v_m = _quantize_to_cache(v, v_sc, v_off)
             k_s = _gqa_expand(k_m, h) if expand else k_m
-            scores = _scores_int(q, k_s, k_sc, k_off, quant.attn_act_bits)
+            scores = _scores_int(q, k_s, k_sc, k_off, quant.attn_act_bits, qk_backend)
         else:
             qf = q
             kf = k
@@ -475,7 +666,11 @@ def attention(
         if quantized:
             k_sc, k_off = cache["k_scale"], cache["k_offset"]
             v_sc, v_off = cache["v_scale"], cache["v_offset"]
-            k_m = _quantize_to_cache(k, k_sc, k_off)
+            if use_binary:
+                # stream ONE packed row: binarize on the fixed prefill grid
+                k_m = _binarize_to_cache(k, k_sc, k_off)
+            else:
+                k_m = _quantize_to_cache(k, k_sc, k_off)
             v_m = _quantize_to_cache(v, v_sc, v_off)
         else:
             k_m = k.astype(cache["k"].dtype)
@@ -501,9 +696,13 @@ def attention(
             if window:
                 valid &= jnp.arange(t)[None, :] > posc - window
         expand = cfg.gqa_mode == "expand"
-        if use_int:
+        if use_int and use_binary:
+            scores = _scores_binary(
+                q, new_k.transpose(0, 2, 1, 3), k_sc, k_off, dh, "attn.qk", qk_backend
+            )
+        elif use_int:
             k_s = _gqa_expand(new_k, h) if expand else new_k
-            scores = _scores_int(q, k_s, k_sc, k_off, quant.attn_act_bits)
+            scores = _scores_int(q, k_s, k_sc, k_off, quant.attn_act_bits, qk_backend)
         else:
             src_k = new_k
             if quantized:
@@ -681,13 +880,26 @@ def mla_attention(
             "bshd,rhd->bshr", q_nope.astype(jnp.float32), w_uk_h.astype(jnp.float32)
         )
         quantized = "ckv_scale" in cache
-        if quantized and quant.quantize_attention:
+        lat_backend = quant.backend_for("attn.qk_latent")
+        if quantized and quant.quantize_attention and (
+            _binary_scores_site(quant, "attn.qk_latent") is not None
+        ):
+            scores_lat = _scores_binary_latent(
+                q_abs,
+                cache["ckv"],
+                cache["ckv_scale"],
+                cache["ckv_offset"],
+                "attn.qk_latent",
+                lat_backend,
+            )
+        elif quantized and quant.quantize_attention:
             scores_lat = _scores_int_latent(
                 q_abs,
                 cache["ckv"],
                 cache["ckv_scale"],
                 cache["ckv_offset"],
                 quant.attn_act_bits,
+                lat_backend,
             )
         else:
             ckv_all = cache["ckv"]

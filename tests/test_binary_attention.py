@@ -1,0 +1,321 @@
+"""Bitwise XNOR-popcount attention: differential oracle + properties.
+
+Three layers of proof for the scores backend family (PR 10):
+
+1. kernel parity — every registered scores core (`binary`, `mxu`, `float`)
+   is BIT-EXACT against the pure-NumPy oracle ``ref.binary_attn_scores_ref``
+   over a shape grid including ragged sequence lengths, head dims that are
+   not multiples of 32, GQA head expansion, and T beyond the popcount
+   chunk size;
+2. engine differential — serving bit-bert-base with ``attn.qk -> "binary"``
+   (autotuned core) produces token-for-token the greedy outputs of the
+   pinned ``"float"`` score core (the deterministic oracle path), through
+   both ``serve_sequential`` and the slot-managed ``ServeEngine``;
+3. site semantics — overriding ``attn.qk`` must NOT leak into
+   ``attn.qk_latent`` (the MLA latent site is addressed separately), and
+   rows of the packed K cache beyond the cursor must be invisible to decode.
+
+Property tests (hypothesis, optional dep) cover the binarizer's monotonicity
+and scale-equivariance and the popcount self-similarity identity.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.configs.smoke import smoke_variant
+from repro.core import backend_registry, packing, site_log
+from repro.core import quantization as Q
+from repro.kernels import ops as K_ops
+from repro.kernels import ref
+from repro.models import model_zoo as Z
+from repro.runtime.serve_loop import Request, ServeEngine, serve_sequential
+
+RNG = np.random.default_rng(20251008)
+
+
+def _with_override(cfg, site, backend):
+    quant = dataclasses.replace(
+        cfg.quant,
+        backend_overrides=cfg.quant.backend_overrides + ((site, backend),),
+    )
+    return dataclasses.replace(cfg, quant=quant)
+
+
+def _bit_planes(b, heads, s, dh, seed):
+    """Random {0,1} bits packed to uint32 planes: (B, heads, S, dw)."""
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(b, heads, s, dh)).astype(np.uint32)
+    return np.asarray(packing.pack_bits(jnp.asarray(bits), 1, axis=-1)), bits
+
+
+# ---------------------------------------------------------------------------
+# 1. kernel parity: every scores core vs the NumPy oracle, bit-exact
+# ---------------------------------------------------------------------------
+
+# (B, H, G, S, T, dh): square, ragged odd S + dh%32 != 0 + GQA, chunked T
+# (T > kernels.binary_attn._T_CHUNK), and decode-shaped S=1 with dw=2
+PARITY_SHAPES = [
+    (1, 4, 4, 8, 8, 32),
+    (2, 4, 2, 5, 7, 48),
+    (1, 8, 2, 3, 300, 16),
+    (2, 6, 3, 1, 9, 64),
+]
+
+
+def _scores_family():
+    return backend_registry.backend_names(family="scores")
+
+
+def test_scores_family_is_registered():
+    names = _scores_family()
+    assert "binary" in names and "float" in names and "mxu" in names
+    # and the qmm family did not grow: scores-only backends are invisible
+    # to QE.qmm and everything enumerating it
+    assert set(backend_registry.backend_names(family="qmm")) == {
+        "mxu", "popcount", "pallas", "fused",
+    }
+
+
+@pytest.mark.parametrize("backend", _scores_family())
+@pytest.mark.parametrize("shape", PARITY_SHAPES, ids=lambda s: "x".join(map(str, s)))
+def test_scores_core_bit_exact_vs_oracle(backend, shape):
+    b, h, g, s, t, dh = shape
+    q_planes, _ = _bit_planes(b, h, s, dh, seed=hash(shape) % 2**31)
+    k_planes, _ = _bit_planes(b, g, t, dh, seed=hash(shape) % 2**31 + 1)
+    expect = ref.binary_attn_scores_ref(q_planes, k_planes, dh)
+    out = K_ops.binary_attn_scores(
+        jnp.asarray(q_planes), jnp.asarray(k_planes), dh=dh, backend=backend
+    )
+    assert out.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out), expect)
+
+
+def test_scores_auto_dispatch_bit_exact():
+    """The autotuned path ("auto" over the scores candidates) is numerically
+    indistinguishable from any pinned core — dispatch never changes bits."""
+    b, h, g, s, t, dh = 2, 4, 2, 6, 11, 48
+    q_planes, _ = _bit_planes(b, h, s, dh, seed=7)
+    k_planes, _ = _bit_planes(b, g, t, dh, seed=8)
+    expect = ref.binary_attn_scores_ref(q_planes, k_planes, dh)
+    out = K_ops.binary_attn_scores(
+        jnp.asarray(q_planes), jnp.asarray(k_planes), dh=dh, backend="auto"
+    )
+    np.testing.assert_array_equal(np.asarray(out), expect)
+
+
+def test_scores_core_rejects_malformed_operands():
+    good, _ = _bit_planes(1, 2, 4, 32, seed=3)
+    with pytest.raises(TypeError):
+        K_ops.binary_attn_scores(
+            jnp.asarray(good, jnp.int32), jnp.asarray(good), dh=32,
+            backend="binary",
+        )
+    with pytest.raises(ValueError):  # word count inconsistent with dh
+        K_ops.binary_attn_scores(
+            jnp.asarray(good), jnp.asarray(good), dh=64, backend="binary"
+        )
+    with pytest.raises(ValueError):  # H not a multiple of G
+        bad_k, _ = _bit_planes(1, 3, 4, 32, seed=4)
+        K_ops.binary_attn_scores(
+            jnp.asarray(good), jnp.asarray(bad_k), dh=32, backend="binary"
+        )
+    with pytest.raises(ValueError):  # qmm-family name is not a scores core
+        K_ops.binary_attn_scores(
+            jnp.asarray(good), jnp.asarray(good), dh=32, backend="fused"
+        )
+
+
+def test_qmm_rejects_scores_only_backend():
+    xq = Q.quantize_activation(jnp.asarray(RNG.standard_normal((4, 32)), jnp.float32), 8)
+    yq = Q.quantize_activation(jnp.asarray(RNG.standard_normal((32, 4)), jnp.float32), 8)
+    from repro.core import qmm as QE
+
+    with pytest.raises(ValueError, match="families"):
+        QE.qmm(xq, yq, backend="float")
+
+
+# ---------------------------------------------------------------------------
+# 2. engine differential: binary engagement vs the float-score oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def bitbert():
+    cfg = smoke_variant(get_config("bit-bert-base"))
+    params = Z.init_params(jax.random.PRNGKey(0), cfg)
+    serving = Z.prepare_serving_params(params, cfg)
+    return cfg, serving
+
+
+def _requests(cfg, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            prompt=rng.integers(
+                0, cfg.vocab_size, size=(int(rng.integers(3, 11)),)
+            ).astype(np.int32),
+            max_new_tokens=int(rng.integers(3, 7)),
+        )
+        for _ in range(n)
+    ]
+
+
+def test_binary_cache_layout(bitbert):
+    """Engaging attn.qk -> binary shrinks the K cache to packed uint32
+    planes (dh bits per row instead of dh int8 bytes); V stays int8."""
+    cfg, _ = bitbert
+    cfgb = _with_override(cfg, "attn.qk", "binary")
+    cache = jax.eval_shape(lambda: Z.init_cache(1, 32, cfgb))
+    base = jax.eval_shape(lambda: Z.init_cache(1, 32, cfg))
+    leaves = {
+        jax.tree_util.keystr(kp): leaf
+        for kp, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]
+    }
+    k = next(v for p, v in leaves.items() if p.endswith("['k']"))
+    v = next(v for p, v in leaves.items() if p.endswith("['v']"))
+    base_leaves = {
+        jax.tree_util.keystr(kp): leaf
+        for kp, leaf in jax.tree_util.tree_flatten_with_path(base)[0]
+    }
+    k_int8 = next(v for p, v in base_leaves.items() if p.endswith("['k']"))
+    assert k_int8.dtype == jnp.int8
+    assert k.dtype == jnp.uint32
+    assert v.dtype == jnp.int8
+    assert k.shape[-1] == packing.packed_len(cfg.d_head, 1)
+    # 32 bits of storage per 16-bit-dh row vs 16 int8 bytes: 4x here, up to
+    # 8x at dh=256 — the serve-mode KV shrink the family buys
+    assert k.size * 4 < v.size
+
+
+def test_sequential_binary_matches_float_oracle(bitbert):
+    """THE differential: greedy serving with the autotuned binary engagement
+    == the pinned float score core, token for token (all scores cores are
+    bit-exact, and the affine epilogue is shared caller code)."""
+    cfg, serving = bitbert
+    cfgb = _with_override(cfg, "attn.qk", "binary")
+    cfgf = _with_override(cfg, "attn.qk", "float")
+    outs = {}
+    for tag, c in (("binary", cfgb), ("float", cfgf)):
+        done = serve_sequential(c, serving, _requests(cfg), max_len=32, seed=0)
+        outs[tag] = [r.output for r in done]
+    assert outs["binary"] == outs["float"]
+    assert all(len(o) for o in outs["binary"])
+
+
+def test_engine_binary_matches_sequential_oracle(bitbert):
+    """Slot-managed continuous batching with the binary engagement matches
+    the sequential oracle exactly — scheduling stays numerically invisible
+    through the packed-plane cache (per-row binarization grids)."""
+    cfg, serving = bitbert
+    cfgb = _with_override(cfg, "attn.qk", "binary")
+    eng = ServeEngine(cfgb, serving, batch_slots=2, max_len=48, seed=0)
+    reqs = _requests(cfg, n=5, seed=1)
+    got = {id(r): r.output for r in eng.run(reqs)}
+    expect = serve_sequential(cfgb, serving, _requests(cfg, n=5, seed=1),
+                              max_len=48, seed=0)
+    assert sorted(got.values()) == sorted(r.output for r in expect)
+
+
+def test_binary_differs_from_int8_path(bitbert):
+    """Sanity that the differential is not vacuous: the 1-bit score path is
+    a genuinely different quantization than the int8 act x act path."""
+    cfg, serving = bitbert
+    cfgb = _with_override(cfg, "attn.qk", "binary")
+    a = [r.output for r in serve_sequential(cfgb, serving, _requests(cfg),
+                                            max_len=32, seed=0)]
+    b = [r.output for r in serve_sequential(cfg, serving, _requests(cfg),
+                                            max_len=32, seed=0)]
+    assert a != b
+
+
+def test_stale_cache_rows_are_invisible(bitbert):
+    """Masked positions must not read the packed K rows beyond the cursor:
+    corrupting them with garbage leaves decode logits bit-identical."""
+    cfg, serving = bitbert
+    cfgb = _with_override(cfg, "attn.qk", "binary")
+    prompt = jnp.asarray(RNG.integers(0, cfg.vocab_size, size=(1, 6)), jnp.int32)
+    cache = Z.init_cache(1, 24, cfgb)
+    _, cache = Z.prefill(serving, prompt, cfgb, cache)
+    tok = jnp.asarray([5], jnp.int32)
+
+    def corrupt(leaf):
+        if leaf.dtype == jnp.uint32 and leaf.ndim >= 4:  # packed K planes
+            garbage = jnp.asarray(
+                RNG.integers(0, 2**32, size=leaf.shape, dtype=np.uint64)
+                .astype(np.uint32)
+            )
+            # rows at positions >= 7 (prompt 6 + 1 decode write) are dead
+            mask = jnp.arange(leaf.shape[-3])[None, :, None, None] >= 7
+            return jnp.where(mask, garbage, leaf)
+        return leaf
+
+    la, _ = Z.decode_step(serving, tok, cfgb, cache)
+    lb, _ = Z.decode_step(serving, tok, cfgb, jax.tree.map(corrupt, cache))
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# 3. site semantics: attn.qk and attn.qk_latent are separate addresses
+# ---------------------------------------------------------------------------
+
+
+def _mla_decode_sites(cfg):
+    serving = jax.eval_shape(
+        lambda k: Z.prepare_serving_params(Z.init_params(k, cfg), cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    cache = jax.eval_shape(lambda: Z.init_cache(2, 16, cfg))
+    tok = jax.ShapeDtypeStruct((2,), jnp.int32)
+    with site_log.recording() as sites:
+        jax.make_jaxpr(lambda p, t, c: Z.decode_step(p, t, cfg, c))(
+            serving, tok, cache
+        )
+    return [s for s in sites if s.get("kind") == "attn"]
+
+
+def test_qk_override_does_not_reach_latent_site():
+    """Regression for the latent-site asymmetry: ``attn.qk`` overrides are
+    NOT wildcards over ``attn.qk_latent`` — the MLA latent QMM keeps its own
+    address and stays on the int path until ITS site is overridden."""
+    base = smoke_variant(get_config("deepseek-v2-lite-16b"))
+    sites = _mla_decode_sites(_with_override(base, "attn.qk", "binary"))
+    latent = [s for s in sites if s.get("site") == "attn.qk_latent"]
+    assert latent, "MLA decode recorded no latent site"
+    for s in latent:
+        # still the int path: the recorded backend is the site's resolved
+        # name (config default), never the scores-only engagement
+        assert s.get("backend") != "binary"
+        assert s.get("bits") == base.quant.attn_act_bits
+        assert s.get("mantissa_dtype") == "int8"
+
+
+def test_latent_site_engages_via_its_own_override():
+    """The satellite-3 unification: attn.qk_latent is reachable through
+    backend_for overrides just like attn.qk."""
+    base = smoke_variant(get_config("deepseek-v2-lite-16b"))
+    sites = _mla_decode_sites(_with_override(base, "attn.qk_latent", "binary"))
+    latent = [s for s in sites if s.get("site") == "attn.qk_latent"]
+    assert latent, "MLA decode recorded no latent site"
+    for s in latent:
+        assert s.get("backend") == "binary"
+        assert s.get("bits") == 1
+        assert s.get("mantissa_dtype") == "uint8"
+
+
+def test_latent_binary_decode_runs_concrete():
+    """The latent binary path executes (not just traces): greedy decode on
+    the MLA arch with attn.qk_latent -> binary produces valid tokens."""
+    cfg = _with_override(
+        smoke_variant(get_config("deepseek-v2-lite-16b")), "attn.qk_latent",
+        "binary",
+    )
+    params = Z.init_params(jax.random.PRNGKey(0), cfg)
+    serving = Z.prepare_serving_params(params, cfg)
+    done = serve_sequential(cfg, serving, _requests(cfg, n=2), max_len=24,
+                            seed=0)
+    assert all(0 <= t < cfg.vocab_size for r in done for t in r.output)

@@ -1,0 +1,78 @@
+"""Property-based invariants of the bitwise-attention path (hypothesis).
+
+Optional-dep module (the test_serve_slots.py idiom): gated by importorskip
+so the minimal CI matrix exercises its absence.  Properties:
+
+* elastic 1-bit binarization is monotone (order -> bit order) and exactly
+  equivariant under positive power-of-two scaling of the row;
+* AND-popcount scores are self-similar: ``counts(a, a)`` is symmetric with
+  ``rowsum(a)`` on the diagonal — the {0,1}-domain analogue of the XNOR
+  identity ``xnor_popcount(a, a) == K``.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep; gate, don't fail collection
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+from repro.core import quantization as Q
+from repro.kernels import ops as K_ops
+
+
+def _bit_planes(b, heads, s, dh, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(b, heads, s, dh)).astype(np.uint32)
+    return np.asarray(packing.pack_bits(jnp.asarray(bits), 1, axis=-1)), bits
+
+
+_rows = st.lists(
+    st.floats(-8.0, 8.0, allow_nan=False, width=32), min_size=4, max_size=32
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(_rows)
+def test_binarization_is_monotone(row):
+    """Elastic binarization preserves order: x_i <= x_j => bit_i <= bit_j
+    (the sign structure of the row survives 1-bit quantization)."""
+    x = jnp.asarray(row, jnp.float32)[None, :]
+    bits = np.asarray(Q.quantize_activation(x, 1, per_channel_axis=0).mantissa[0])
+    order = np.argsort(np.asarray(row), kind="stable")
+    assert (np.diff(bits[order]) >= 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(_rows, st.integers(-4, 4))
+def test_binarization_scale_equivariance(row, log2c):
+    """Scaling a row by a positive power of two leaves the mantissa bits
+    unchanged and scales the affine exactly (no regrid drift)."""
+    c = float(2.0 ** log2c)
+    x = jnp.asarray(row, jnp.float32)[None, :]
+    a = Q.quantize_activation(x, 1, per_channel_axis=0)
+    b = Q.quantize_activation(c * x, 1, per_channel_axis=0)
+    np.testing.assert_array_equal(np.asarray(a.mantissa), np.asarray(b.mantissa))
+    if float(jnp.max(x)) > float(jnp.min(x)):  # non-degenerate grid
+        np.testing.assert_allclose(
+            np.asarray(b.scale), c * np.asarray(a.scale), rtol=1e-6
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(1, 6))
+def test_popcount_self_similarity(seed, heads, s):
+    """counts(a, a) has rowsum(a) on its diagonal and is symmetric — the
+    AND-popcount analogue of the XNOR identity xnor_pop(a, a) == K."""
+    dh = 40
+    planes, bits = _bit_planes(1, heads, s, dh, seed=seed)
+    counts = np.asarray(
+        K_ops.binary_attn_scores(
+            jnp.asarray(planes), jnp.asarray(planes), dh=dh, backend="binary"
+        )
+    )
+    rowsum = bits.sum(-1)
+    for hh in range(heads):
+        np.testing.assert_array_equal(np.diagonal(counts[0, hh]), rowsum[0, hh])
+        np.testing.assert_array_equal(counts[0, hh], counts[0, hh].T)

@@ -76,4 +76,6 @@ def test_committed_artifact_validates_against_current_registry():
     path = os.path.join(REPO, "BENCH_qmm.json")
     doc = R.load_qmm_bench(path)
     covered = {c["backend"] for c in doc["cells"]}
-    assert covered >= set(BR.backend_names())
+    # the QMM roofline tracks the qmm family; scores-family backends are
+    # tracked by BENCH_attn.json instead
+    assert covered >= set(BR.backend_names(family="qmm"))
